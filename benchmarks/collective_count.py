@@ -1,0 +1,77 @@
+"""Structural verification of the SA claim on the compiled artifacts:
+count collectives (static ops x scan trip counts) in the distributed
+solver HLO for several s, and in the trainer for several microbatch
+settings. This is the dry-run analogue of the paper's latency
+measurements: runtime messages per solve = static collectives x trips.
+
+Runs in a subprocess with 8 placeholder devices (the bench process keeps
+1 device).
+"""
+import os
+import re
+import subprocess
+import sys
+
+from benchmarks.common import emit
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import re, jax
+from repro.core.distributed import lower_lasso_step, lower_svm_step
+from repro.core.types import SolverConfig
+from repro.roofline.analysis import collective_bytes_from_hlo
+
+mesh = jax.make_mesh((8,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh_m = jax.make_mesh((8,), ("model",),
+                       axis_types=(jax.sharding.AxisType.Auto,))
+H = 64
+for s in (1, 4, 16):
+    cfg = SolverConfig(block_size=4, iterations=H, s=s,
+                       track_objective=False)
+    txt = lower_lasso_step(cfg, mesh, m=512, n=128).compile().as_text()
+    static = len(re.findall(r"= \S+ all-reduce\(", txt))
+    trips = H // s
+    bytes_ = collective_bytes_from_hlo(txt)["total"]
+    print(f"LASSO s={s} static={static} trips={trips} "
+          f"runtime_msgs={static * trips} bytes_per_outer={bytes_}")
+for s in (1, 4, 16):
+    cfg = SolverConfig(block_size=1, iterations=H, s=s,
+                       track_objective=False)
+    txt = lower_svm_step(cfg, mesh_m, m=256, n=512).compile().as_text()
+    static = len(re.findall(r"= \S+ all-reduce\(", txt))
+    trips = H // s
+    print(f"SVM s={s} static={static} trips={trips} "
+          f"runtime_msgs={static * trips}")
+"""
+
+
+def main():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", CODE], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    if out.returncode != 0:
+        emit("collective_count/ERROR", 0.0, out.stderr[-300:].replace(
+            "\n", " ")[:200])
+        return
+    rows = {}
+    for line in out.stdout.splitlines():
+        m = re.match(r"(LASSO|SVM) s=(\d+) static=(\d+) trips=(\d+) "
+                     r"runtime_msgs=(\d+)", line)
+        if m:
+            kind, s, static, trips, msgs = m.groups()
+            rows[(kind, int(s))] = int(msgs)
+            emit(f"collective_count/{kind.lower()}/s{s}", 0.0,
+                 f"static={static};trips={trips};runtime_msgs={msgs}")
+    for kind in ("LASSO", "SVM"):
+        if (kind, 1) in rows and (kind, 16) in rows:
+            red = rows[(kind, 1)] / max(rows[(kind, 16)], 1)
+            emit(f"collective_count/{kind.lower()}/reduction_s16", 0.0,
+                 f"latency_reduction={red:.1f}x(expected~16x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Paper SVM artifacts: Fig. 5 (duality gap, SA == non-SA) and Table V
+(speedups at best s from the machine model)."""
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import (SVMProblem, SolverConfig, dcd_svm, duality_gap,
+                        sa_svm)
+from repro.core.cost_model import (Machine, PAPER_DATASETS, best_s,
+                                   svm_speedup)
+from repro.data.sparse import make_svm_dataset
+
+H = 512
+S_BIG = 64       # paper Fig. 5 uses s=500; s=64 for CPU wall-time
+
+
+def fig5_duality_gap():
+    for ds in ("w1a-like", "duke-like", "rcv1-like", "gisette-like"):
+        A, b = make_svm_dataset(ds, seed=0)
+        for loss in ("l1", "l2"):
+            prob = SVMProblem(A=A, b=b, lam=1.0, loss=loss)
+            cfg = SolverConfig(iterations=H)
+            us, res = timeit(lambda: dcd_svm(prob, cfg), repeats=1)
+            _, res_sa = timeit(
+                lambda: sa_svm(prob, dataclasses.replace(cfg, s=S_BIG)),
+                repeats=1)
+            o1 = np.asarray(res.objective)
+            o2 = np.asarray(res_sa.objective)
+            dev = float(np.max(np.abs(o1 - o2)
+                               / np.maximum(np.abs(o1), 1e-9)))
+            gap = float(duality_gap(prob, res.x, res.aux["alpha"]))
+            gap_sa = float(duality_gap(prob, res_sa.x,
+                                       res_sa.aux["alpha"]))
+            emit(f"fig5/{ds}/svm-{loss}", us / H,
+                 f"gap={gap:.4g};gap_sa={gap_sa:.4g};"
+                 f"sa_traj_dev={dev:.2e}")
+
+
+def table5_speedups():
+    """Table V: predicted SA-SVM-L1 speedups at the paper's processor
+    counts (machine model; paper measured 1.4x/2.1x/4x)."""
+    machine = Machine.cray_xc30()
+    paper = {"rcv1.binary": (240, 1.4), "news20.binary": (576, 2.1),
+             "gisette": (3072, 4.0)}
+    for ds, (P, measured) in paper.items():
+        dims = PAPER_DATASETS[ds]
+        s_star, sp = best_s(dims, H=200_000, mu=1, P=P, machine=machine,
+                            kind="svm")
+        sp64 = svm_speedup(dims, 200_000, 64, P, machine)
+        emit(f"table5/{ds}/P{P}", 0.0,
+             f"model_best_s={s_star};model_speedup={sp:.2f};"
+             f"model_speedup_s64={sp64:.2f};paper_measured={measured}")
+
+
+def main():
+    fig5_duality_gap()
+    table5_speedups()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Roofline reporting: reads the dry-run result cache (results/dryrun/)
+and emits the per-cell three-term table + the markdown used by
+EXPERIMENTS.md §Roofline. Also benchmarks the Pallas kernels in interpret
+mode against their refs (correctness-trend numbers, not TPU wall time).
+"""
+import glob
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun")
+MD_OUT = os.path.join(os.path.dirname(__file__), "..", "results",
+                      "roofline.md")
+
+
+def load_cells():
+    cells = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def roofline_table():
+    cells = load_cells()
+    if not cells:
+        emit("roofline/NO_RESULTS", 0.0,
+             "run PYTHONPATH=src python -m repro.launch.dryrun first")
+        return
+    lines = ["| arch | shape | mesh | mem/dev GB | fits | compute ms | "
+             "memory ms | collective ms | bound | MODEL/HLO | +attn |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in cells:
+        if r["status"] == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"— | — | — | — | — | SKIP (full attention) | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR | | | | | {r['error'][:40]} | | |")
+            emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+                 "ERROR")
+            continue
+        m = r["memory"]
+        if "roofline" not in r:      # multi-pod compile-only pass
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"{m['total_bytes'] / 1e9:.1f} | {m['fits_hbm']} | "
+                f"— | — | — | compile-only | — | — |")
+            emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+                 f"compile_ok;mem_gb={m['total_bytes'] / 1e9:.1f};"
+                 f"fits={m['fits_hbm']}")
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{m['total_bytes'] / 1e9:.1f} | {m['fits_hbm']} | "
+            f"{t['compute_s'] * 1e3:.1f} | {t['memory_s'] * 1e3:.1f} | "
+            f"{t['collective_s'] * 1e3:.1f} | {t['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {r.get('useful_ratio_attn', 0):.2f} |")
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+             t["bound_s"] * 1e6,
+             f"bound={t['dominant']};compute_ms={t['compute_s'] * 1e3:.1f};"
+             f"memory_ms={t['memory_s'] * 1e3:.1f};"
+             f"collective_ms={t['collective_s'] * 1e3:.1f};"
+             f"useful={r['useful_ratio']:.2f};fits={m['fits_hbm']}")
+    os.makedirs(os.path.dirname(MD_OUT), exist_ok=True)
+    with open(MD_OUT, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    ok = [r for r in cells if r["status"] == "ok"]
+    if ok:
+        fits = sum(1 for r in ok if r["memory"]["fits_hbm"])
+        emit("roofline/summary", 0.0,
+             f"cells_ok={len(ok)};fits={fits};"
+             f"skips={sum(1 for r in cells if r['status'] == 'skip')};"
+             f"errors={sum(1 for r in cells if r['status'] == 'error')}")
+
+
+def kernel_bench():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.gram.ops import gram_t
+    from repro.kernels.gram.ref import gram_t_ref
+
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (4096, 256), jnp.float32)
+    y = jax.random.normal(jax.random.fold_in(key, 1), (4096, 258),
+                          jnp.float32)
+    us_ref, ref = timeit(lambda: gram_t_ref(x, y))
+    emit("kernels/gram/xla_ref", us_ref, f"shape=4096x256x258")
+    err = float(jnp.max(jnp.abs(
+        gram_t(x, y, interpret=True) - ref)))
+    emit("kernels/gram/pallas_interpret", 0.0,
+         f"allclose_err={err:.2e}(validated; TPU wall-time N/A on CPU)")
+
+
+def main():
+    roofline_table()
+    kernel_bench()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark entry point — one section per paper table/figure plus the
+roofline/dry-run report. Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,table5,...]
+"""
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import header
+
+SECTIONS = {}
+
+
+def _register():
+    from benchmarks import paper_lasso, paper_svm, collective_count, \
+        roofline_bench
+    SECTIONS.update({
+        "fig2": paper_lasso.fig2_convergence,
+        "table3": paper_lasso.table3_relative_error,
+        "fig3": paper_lasso.fig3_runtime,
+        "table1": paper_lasso.table1_costs,
+        "fig4": paper_lasso.fig4_scaling,
+        "fig5": paper_svm.fig5_duality_gap,
+        "table5": paper_svm.table5_speedups,
+        "collectives": collective_count.main,
+        "roofline": roofline_bench.main,
+    })
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section names")
+    args = ap.parse_args()
+    _register()
+    names = args.only.split(",") if args.only else list(SECTIONS)
+    header()
+    failures = 0
+    for name in names:
+        try:
+            SECTIONS[name]()
+        except Exception:
+            failures += 1
+            print(f"{name},0.00,SECTION_ERROR", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

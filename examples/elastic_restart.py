@@ -1,0 +1,52 @@
+"""Fault-tolerance demo: inject a host failure mid-training and watch the
+driver re-mesh onto the survivors, restore the checkpoint, and continue.
+
+Must run with placeholder devices (set before jax imports):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/elastic_restart.py
+"""
+import os
+import sys
+
+if "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import tempfile
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.data.tokens import TokenPipeline
+from repro.optim.adamw import AdamW
+from repro.runtime.driver import Trainer, TrainerConfig
+from repro.runtime.failures import FailureInjector
+from repro.runtime.stragglers import StragglerMonitor
+
+
+def main():
+    print(f"devices: {len(jax.devices())}")
+    arch = get_smoke_config("tinyllama-1.1b")
+    pipe = TokenPipeline(vocab_size=arch.vocab_size, global_batch=8,
+                         seq_len=64, seed=0)
+    cfg = TrainerConfig(steps=24, ckpt_dir=tempfile.mkdtemp(),
+                        ckpt_every=6, model_axis=2)
+    injector = FailureInjector(failures={10: [3]})  # host 3 dies @ step 10
+    trainer = Trainer(arch, AdamW(learning_rate=1e-3), pipe, cfg,
+                      failure_injector=injector,
+                      straggler_monitor=StragglerMonitor(n_hosts=4),
+                      host_of_device=lambda i: i // 2)  # 2 devices/host
+    out = trainer.run()
+    print(f"completed {out['final_step']} steps; "
+          f"loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+    for e in out["events"]:
+        print("event:", e)
+    assert any("re-meshed" in e for e in out["events"])
+    print("elastic restart: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""The paper technique meeting the LM framework: train a sparse Lasso
+probe on frozen transformer features with SA-accBCD.
+
+This is exactly the paper's workload shape — A = feature matrix (rows =
+examples, sharded data-parallel), solved by synchronization-avoiding
+block coordinate descent. On a pod the probe solve inherits the s-fold
+latency reduction.
+
+    PYTHONPATH=src python examples/lm_probe_lasso.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import LassoProblem, SolverConfig, solve_lasso
+from repro.models import lm
+
+
+def main():
+    arch = get_smoke_config("tinyllama-1.1b")
+    params = lm.init_params(arch, jax.random.key(0))
+
+    # 1. extract features: mean-pooled final hidden states over a corpus.
+    rng = np.random.default_rng(0)
+    n_examples = 256
+    tokens = rng.integers(0, arch.vocab_size, (n_examples, 32)) \
+        .astype(np.int32)
+
+    @jax.jit
+    def features(tokens):
+        # forward up to the final norm; pool over sequence.
+        x = params["embed"][tokens].astype(arch.jnp_dtype)
+
+        def fn(slot_params, x, kind):
+            return lm._block_forward(slot_params, x, arch, kind)
+
+        x, _ = lm._scan_layers(params, x, arch, fn)
+        return jnp.mean(x.astype(jnp.float32), axis=1)
+
+    A = np.asarray(features(tokens))                   # (N, d_model)
+    # synthetic probe target: a sparse linear functional of the features.
+    w_true = np.zeros(A.shape[1], np.float32)
+    w_true[rng.choice(A.shape[1], 6, replace=False)] = \
+        rng.standard_normal(6)
+    y = A @ w_true + 0.01 * rng.standard_normal(n_examples)
+
+    # 2. solve the probe with the paper's SA-accBCD.
+    lam = 0.05 * float(np.abs(A.T @ y).max())
+    res = solve_lasso(LassoProblem(A=A, b=y.astype(np.float32), lam=lam),
+                      SolverConfig(block_size=4, iterations=256, s=16))
+    w = np.asarray(res.x)
+    obj = np.asarray(res.objective)
+    support = set(np.flatnonzero(np.abs(w) > 1e-3).tolist())
+    true_support = set(np.flatnonzero(w_true).tolist())
+    print(f"probe objective {obj[0]:.4f} -> {obj[-1]:.4f}")
+    print(f"recovered support {sorted(support)}")
+    print(f"true support      {sorted(true_support)}")
+    print(f"support recall: "
+          f"{len(support & true_support)}/{len(true_support)}")
+
+
+if __name__ == "__main__":
+    main()

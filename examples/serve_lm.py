@@ -1,0 +1,36 @@
+"""Batched serving demo: prefill + decode with KV/state caches across
+architecture families (dense GQA / SWA+MoE / recurrent xLSTM).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import BatchedServer
+from repro.models import lm
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for arch_name in ("tinyllama-1.1b", "mixtral-8x7b", "xlstm-350m"):
+        arch = get_smoke_config(arch_name)
+        params = lm.init_params(arch, jax.random.key(0))
+        server = BatchedServer(arch, params, max_seq=48)
+        prompts = rng.integers(0, arch.vocab_size, (4, 16)).astype(np.int32)
+        t0 = time.perf_counter()
+        out = server.generate(prompts, gen_len=16)
+        dt = time.perf_counter() - t0
+        print(f"{arch_name:16s} ({arch.family:6s}): generated "
+              f"{out.shape[0]}x{out.shape[1]} tokens in {dt:.2f}s "
+              f"-> {out[0][:6].tolist()}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,223 @@
+"""Sharded checkpointing with atomic writes, retention, async save and
+cross-topology (elastic) restore.
+
+Layout:  <dir>/step_<N>/
+             manifest.json   — tree structure, shapes, dtypes, step,
+                               partition specs (logical, mesh-agnostic),
+                               data-pipeline state, extra metadata
+             arrays.npz      — flattened leaves keyed by path
+
+Because the manifest stores *logical* PartitionSpecs (axis names, not
+device ids), a checkpoint written on a 512-chip mesh restores onto any
+mesh whose axis names exist — the basis of elastic scaling: after a node
+failure the driver rebuilds a smaller mesh and restores the same
+checkpoint onto it.
+
+Single-process container note: on a real multi-host pod each host writes
+its local shards (process_index-suffixed npz) and host 0 the manifest;
+here process count is 1, so one npz holds everything. The format keeps
+the per-host field so the layout is forward-compatible.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            parts.append(str(e.key))
+        elif isinstance(e, jax.tree_util.SequenceKey):
+            parts.append(str(e.idx))
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            parts.append(str(e.name))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+def _spec_to_json(spec: P):
+    out = []
+    for part in spec:
+        if part is None:
+            out.append(None)
+        elif isinstance(part, (tuple, list)):
+            out.append(list(part))
+        else:
+            out.append(part)
+    return out
+
+
+def _spec_from_json(obj):
+    return P(*[tuple(p) if isinstance(p, list) else p for p in obj])
+
+
+# numpy's savez cannot represent ml_dtypes types (bfloat16, float8s) —
+# they round-trip as raw void. Encode them as unsigned views + the
+# logical dtype string in the manifest.
+_EXOTIC_VIEWS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+                 "float8_e5m2": np.uint8}
+
+
+def _encode_array(arr: np.ndarray):
+    name = arr.dtype.name
+    if name in _EXOTIC_VIEWS:
+        return arr.view(_EXOTIC_VIEWS[name]), name
+    return arr, name
+
+
+def _decode_array(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _EXOTIC_VIEWS:
+        import ml_dtypes
+        return arr.view(getattr(ml_dtypes, dtype_name))
+    return arr
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    specs: Optional[Any] = None,
+                    extra: Optional[Dict] = None) -> str:
+    """Atomic save: write to a temp dir, fsync, rename."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+        arrays = {}
+        manifest_leaves = []
+        spec_flat = None
+        if specs is not None:
+            spec_flat = [s for _, s in
+                         jax.tree_util.tree_flatten_with_path(
+                             specs, is_leaf=lambda x: isinstance(x, P))[0]]
+        for i, (path, leaf) in enumerate(flat):
+            key = _path_str(path)
+            raw = np.asarray(jax.device_get(leaf))
+            arrays[key], dtype_name = _encode_array(raw)
+            manifest_leaves.append({
+                "path": key,
+                "shape": list(raw.shape),
+                "dtype": dtype_name,
+                "spec": _spec_to_json(spec_flat[i])
+                if spec_flat is not None else None,
+            })
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {"step": step, "process_count": 1,
+                    "leaves": manifest_leaves, "extra": extra or {}}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        return final
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: Optional[int] = None,
+                       tree_like: Any = None,
+                       mesh: Optional[Mesh] = None):
+    """Restore. With ``mesh``, leaves are placed with their manifest
+    PartitionSpecs re-bound to THIS mesh (cross-topology / elastic restore:
+    axis names are logical; the mesh may have different sizes).
+
+    Returns (tree, manifest_extra).
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+
+    by_path = {}
+    for leaf_info in manifest["leaves"]:
+        arr = _decode_array(data[leaf_info["path"]], leaf_info["dtype"])
+        if mesh is not None and leaf_info["spec"] is not None:
+            spec = _spec_from_json(leaf_info["spec"])
+            spec = P(*[p if _axes_exist(p, mesh) else None for p in spec])
+            arr = jax.device_put(arr, NamedSharding(mesh, spec))
+        by_path[leaf_info["path"]] = arr
+
+    if tree_like is not None:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+        leaves = [by_path[_path_str(p)] for p, _ in flat]
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    else:
+        tree = by_path
+    return tree, manifest.get("extra", {})
+
+
+def _axes_exist(part, mesh: Mesh) -> bool:
+    if part is None:
+        return True
+    names = (part,) if isinstance(part, str) else tuple(part)
+    return all(n in mesh.axis_names for n in names)
+
+
+class CheckpointManager:
+    """Retention + async save on top of save/restore."""
+
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: Any, specs=None, extra=None):
+        # materialize on host BEFORE handing to the thread (the train loop
+        # may donate/overwrite device buffers).
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+
+        def work():
+            save_checkpoint(self.directory, step, host_tree, specs, extra)
+            self._gc()
+
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(int(d.split("_")[1])
+                       for d in os.listdir(self.directory)
+                       if d.startswith("step_"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, tree_like=None, mesh=None):
+        self.wait()
+        return restore_checkpoint(self.directory, None, tree_like, mesh)

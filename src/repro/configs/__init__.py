@@ -1,0 +1,39 @@
+"""Architecture registry: ``get_config(name)`` / ``list_archs()``.
+
+Each assigned architecture lives in its own module with the exact
+hyperparameters from the brief plus a reduced smoke-test variant.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, input_specs
+
+_ARCH_MODULES = {
+    "hymba-1.5b": "repro.configs.hymba_1p5b",
+    "tinyllama-1.1b": "repro.configs.tinyllama_1p1b",
+    "stablelm-12b": "repro.configs.stablelm_12b",
+    "qwen1.5-4b": "repro.configs.qwen15_4b",
+    "llama3-8b": "repro.configs.llama3_8b",
+    "pixtral-12b": "repro.configs.pixtral_12b",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+}
+
+
+def list_archs() -> List[str]:
+    return sorted(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(_ARCH_MODULES[name])
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    mod = importlib.import_module(_ARCH_MODULES[name])
+    return mod.SMOKE_CONFIG

@@ -1,0 +1,133 @@
+"""Analytical cost model — paper Table I — plus an alpha-beta-gamma machine
+model that predicts running times, speedups, and the optimal unrolling
+parameter s. Used by ``benchmarks/paper/table1_costs.py``,
+``fig4_scaling.py`` and ``table5_svm_speedup.py``.
+
+Paper Table I (critical-path costs; A sparse with density f, H iterations,
+block size mu, P processors, s = unrolling parameter):
+
+  accBCD:     F = O(H mu^2 f m / P + H mu^3)    L = O(H log P)
+              W = O(H mu^2 log P)               M = O(fmn/P + m/P + mu^2 + n)
+  SA-accBCD:  F = O(H mu^2 s f m / P + H mu^3)  L = O(H/s log P)
+              W = O(H s mu^2 log P)             M = O(fmn/P + m/P + mu^2 s^2 + n)
+
+The machine model assigns time
+  T = gamma * F  +  beta * W  +  alpha * L
+with per-flop time gamma, per-word time beta, per-message latency alpha.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Machine:
+    """alpha-beta-gamma-kappa machine parameters (seconds, words = 8 B).
+
+    kappa is the per-inner-iteration serial overhead (BLAS dispatch,
+    subproblem solve bookkeeping) that communication-avoiding does NOT
+    remove — both classical and SA execute H inner iterations. Without it
+    the model predicts speedup -> alpha*logP/0 as s grows; with it the
+    speedup saturates at ~(alpha*logP + kappa)/kappa, which is what the
+    paper measures (1.2x-5.1x)."""
+    name: str
+    alpha: float     # latency per message (s)
+    beta: float      # inverse bandwidth, per 8-byte word (s/word)
+    gamma: float     # time per flop (s/flop)
+    kappa: float = 0.0   # per-inner-iteration overhead (s)
+
+    @classmethod
+    def cray_xc30(cls) -> "Machine":
+        # Aries interconnect: ~1.3 us latency, ~8 GB/s per-core effective BW,
+        # ~10 GFLOP/s per-core DGEMM, ~3 us per-iteration serial overhead.
+        return cls("cray-xc30", alpha=1.3e-6, beta=8.0 / 8e9,
+                   gamma=1.0 / 10e9, kappa=3.0e-6)
+
+    @classmethod
+    def tpu_v5e_pod(cls) -> "Machine":
+        # Per-chip: 197 TFLOP/s bf16, ICI ~50 GB/s/link; collective launch
+        # overhead on the order of ~5 us; ~1 us per fused inner step (the
+        # sa_inner kernel runs all s steps in one launch).
+        return cls("tpu-v5e", alpha=5.0e-6, beta=8.0 / 50e9,
+                   gamma=1.0 / 197e12, kappa=1.0e-6)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemDims:
+    m: int           # data points
+    n: int           # features
+    f: float         # density (nnz / (m*n))
+
+
+def lasso_costs(dims: ProblemDims, H: int, mu: int, s: int, P: int
+                ) -> Dict[str, float]:
+    """Table I entries for (SA-)accBCD. s=1 gives the classical column."""
+    logP = max(math.log2(max(P, 2)), 1.0)
+    F = H * mu * mu * s * dims.f * dims.m / P + H * mu ** 3
+    L = (H / s) * logP
+    W = H * s * mu * mu * logP
+    M = (dims.f * dims.m * dims.n + dims.m) / P + mu * mu * s * s + dims.n
+    return {"F": F, "L": L, "W": W, "M": M, "I": float(H)}
+
+
+def svm_costs(dims: ProblemDims, H: int, s: int, P: int) -> Dict[str, float]:
+    """SVM analogue (mu = 1 coordinate per iteration; Gram is s x s)."""
+    logP = max(math.log2(max(P, 2)), 1.0)
+    F = H * s * dims.f * dims.n / P + H * s
+    L = (H / s) * logP
+    W = H * s * logP
+    M = (dims.f * dims.m * dims.n) / P + dims.m + s * s + dims.n / P
+    return {"F": F, "L": L, "W": W, "M": M, "I": float(H)}
+
+
+def predicted_time(costs: Dict[str, float], machine: Machine) -> float:
+    return machine.gamma * costs["F"] + machine.beta * costs["W"] \
+        + machine.alpha * costs["L"] + machine.kappa * costs.get("I", 0.0)
+
+
+def lasso_speedup(dims: ProblemDims, H: int, mu: int, s: int, P: int,
+                  machine: Machine) -> float:
+    """T(classical) / T(SA with unrolling s)."""
+    t1 = predicted_time(lasso_costs(dims, H, mu, 1, P), machine)
+    ts = predicted_time(lasso_costs(dims, H, mu, s, P), machine)
+    return t1 / ts
+
+
+def svm_speedup(dims: ProblemDims, H: int, s: int, P: int,
+                machine: Machine) -> float:
+    t1 = predicted_time(svm_costs(dims, H, 1, P), machine)
+    ts = predicted_time(svm_costs(dims, H, s, P), machine)
+    return t1 / ts
+
+
+def best_s(dims: ProblemDims, H: int, mu: int, P: int, machine: Machine,
+           candidates=(1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024),
+           kind: str = "lasso"):
+    """Sweep s and return (s*, speedup(s*)) — the paper's tuning knob.
+
+    The existence of an interior optimum (speedup rises with s while
+    latency dominates, then falls once the s*mu^2 bandwidth/flop terms take
+    over) reproduces the qualitative shape of paper Fig. 4e-h.
+    """
+    fn = (lambda s: lasso_speedup(dims, H, mu, s, P, machine)) \
+        if kind == "lasso" else (lambda s: svm_speedup(dims, H, s, P, machine))
+    best = max(candidates, key=fn)
+    return best, fn(best)
+
+
+# Paper Table II / IV dataset shape regimes (for benchmarks; we generate
+# synthetic analogues scaled to CPU-feasible sizes — see repro.data.sparse).
+PAPER_DATASETS = {
+    "url": ProblemDims(m=2_396_130, n=3_231_961, f=3.6e-5),
+    "news20": ProblemDims(m=15_935, n=62_061, f=1.3e-3),
+    "covtype": ProblemDims(m=581_012, n=54, f=0.22),
+    "epsilon": ProblemDims(m=400_000, n=2_000, f=1.0),
+    "leu": ProblemDims(m=38, n=7_129, f=1.0),
+    "w1a": ProblemDims(m=300, n=2_477, f=0.04),
+    "duke": ProblemDims(m=44, n=7_129, f=1.0),
+    "news20.binary": ProblemDims(m=1_355_191, n=19_996, f=3.0e-4),
+    "rcv1.binary": ProblemDims(m=47_236, n=20_242, f=1.6e-3),
+    "gisette": ProblemDims(m=5_000, n=6_000, f=0.99),
+}

@@ -1,0 +1,80 @@
+"""Small linear-algebra and sampling utilities shared by the solvers."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def power_iteration_max_eig(G, iters: int = 32):
+    """Largest eigenvalue of a small PSD matrix G (mu x mu).
+
+    Fixed iteration count + deterministic start vector: TPU-friendly (no
+    data-dependent control flow) replacement for LAPACK ``eig`` in paper
+    Alg. 1 line 10. Exact for mu = 1; validated against eigvalsh in tests.
+    """
+    mu = G.shape[0]
+    if mu == 1:
+        return G[0, 0]
+    v = jnp.ones((mu,), dtype=G.dtype) / jnp.sqrt(jnp.asarray(mu, G.dtype))
+
+    def body(v, _):
+        w = G @ v
+        v = w / jnp.maximum(jnp.linalg.norm(w), 1e-30)
+        return v, None
+
+    v, _ = jax.lax.scan(body, v, None, length=iters)
+    return v @ (G @ v)
+
+
+def theta_schedule(theta0, num: int, q: float):
+    """Pre-compute the APPROX acceleration scalars.
+
+    theta_h = (sqrt(theta_{h-1}^4 + 4 theta_{h-1}^2) - theta_{h-1}^2) / 2
+    (paper Alg. 1 line 18; Alg. 2 line 9 drops the ``4`` — a typo, see
+    DESIGN.md). Returns thetas[0..num] with thetas[0] = theta0.
+
+    ``q`` is unused by the recurrence itself but kept so callers document
+    the q = ceil(n / mu) block count alongside the schedule.
+    """
+    del q
+
+    def body(th, _):
+        th2 = th * th
+        nxt = (jnp.sqrt(th2 * th2 + 4.0 * th2) - th2) / 2.0
+        return nxt, nxt
+
+    _, rest = jax.lax.scan(body, theta0, None, length=num)
+    return jnp.concatenate([jnp.asarray(theta0)[None], rest])
+
+
+def sample_block(key, n: int, mu: int):
+    """Sample mu of n coordinates uniformly without replacement.
+
+    Uses the Gumbel top-k trick (argsort of iid noise) — identical draws on
+    every shard given the same (replicated) key, which is the paper's
+    "initialize the RNG to the same seed on all processors" requirement.
+    """
+    if mu == n:
+        return jnp.arange(n)
+    noise = jax.random.uniform(key, (n,))
+    _, idx = jax.lax.top_k(noise, mu)
+    return idx
+
+
+def sample_group(key, n_groups: int, group_size: int):
+    """Sample one whole group (group-lasso mode): returns its coordinates."""
+    g = jax.random.randint(key, (), 0, n_groups)
+    return g * group_size + jnp.arange(group_size)
+
+
+def preduce(x, axis_name: Optional[str]):
+    """psum over ``axis_name`` when distributed, identity otherwise.
+
+    ``axis_name`` may be a tuple of axis names for hierarchical meshes
+    (e.g. ('pod', 'data')) — jax.lax.psum reduces over all of them.
+    """
+    if axis_name is None:
+        return x
+    return jax.lax.psum(x, axis_name)

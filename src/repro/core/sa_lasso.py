@@ -1,0 +1,226 @@
+"""Synchronization-Avoiding coordinate-descent solvers for proximal
+least-squares — paper Algorithm 2 (SA-accBCD) and the non-accelerated
+SA-BCD / SA-CD variants.
+
+The transformation (paper Sec. III): unroll the recurrences s iterations,
+sample all s*mu coordinates up front, compute ONE (s*mu) x (s*mu) Gram
+matrix plus the projections Y^T [ytil, ztil] with a SINGLE Allreduce, then
+run the s inner updates redundantly on replicated O(s*mu)-sized data, and
+apply the deferred m-dimensional vector updates (paper Eqs. 6-9) as local
+GEMVs. Latency drops by s; flops/bandwidth grow by s (paper Table I). The
+iterate sequence is identical to Algorithm 1 in exact arithmetic.
+
+The hot spots map to the two Pallas kernels:
+  * ``repro.kernels.gram``     — the fused  Y^T [Y | ytil | ztil]  GEMM
+  * ``repro.kernels.sa_inner`` — the s-step inner loop, entirely in VMEM
+Both have pure-jnp paths (used on CPU and inside the multi-device dry-run).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linalg
+from repro.core.lasso import _objective, _prep
+from repro.core.types import LassoProblem, SolverConfig, SolverResult
+
+
+# Perf-iteration flag (EXPERIMENTS.md §Perf): the paper notes (footnote 3)
+# that G is symmetric, so communicating only the lower triangle halves the
+# message size. Baseline (paper-faithful main path) reduces the full
+# matrix; SYMMETRIC_GRAM packs tril(G) before the Allreduce and
+# reconstitutes afterwards — ~2x less W at O(s^2 mu^2) local reshuffling.
+SYMMETRIC_GRAM = False
+
+
+def _gram_and_proj(Y, vecs, axis_name):
+    """ONE fused Allreduce:  Y^T @ [Y | vecs]  (paper Alg. 2 lines 11-12).
+
+    Y: (m_loc, s*mu) sampled columns; vecs: (m_loc, k) residual-like vectors.
+    Returns (G, P) with G (s*mu, s*mu) and P (s*mu, k), replicated.
+    """
+    smu = Y.shape[1]
+    local = Y.T @ jnp.concatenate([Y, vecs], axis=1)
+    if SYMMETRIC_GRAM:
+        il, jl = jnp.tril_indices(smu)
+        packed = jnp.concatenate(
+            [local[:, :smu][il, jl], local[:, smu:].reshape(-1)])
+        packed = linalg.preduce(packed, axis_name)
+        ntri = il.shape[0]
+        G = jnp.zeros((smu, smu), local.dtype).at[il, jl].set(packed[:ntri])
+        G = G + jnp.tril(G, -1).T
+        P = packed[ntri:].reshape(smu, vecs.shape[1])
+        return G, P
+    out = linalg.preduce(local, axis_name)
+    return out[:, :smu], out[:, smu:]
+
+
+def _sample_all(key, sampler, k, s):
+    """Sample the s blocks of outer iteration k, matching the non-SA
+    fold_in indices (global iteration ids h = k*s + j, j = 1..s) so SA and
+    non-SA draw bit-identical coordinate sequences."""
+    hs = k * s + 1 + jnp.arange(s)
+    return jax.vmap(lambda h: sampler(jax.random.fold_in(key, h)))(hs)
+
+
+# ---------------------------------------------------------------------------
+# SA-BCD (non-accelerated): r_j = A_j^T r_sk + sum_{t<j} G[j,t] dx_t
+# ---------------------------------------------------------------------------
+
+def sa_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
+                 axis_name: Optional[object] = None) -> SolverResult:
+    A, b, n, mu, q, sampler, prox = _prep(problem, cfg)
+    key = jax.random.key(cfg.seed)
+    s, H = cfg.s, cfg.iterations
+    K = H // s
+    m_loc = A.shape[0]
+
+    x0 = jnp.zeros((n,), cfg.dtype)
+    r0 = -b
+
+    def outer(carry, k):
+        x, r = carry
+        idxs = _sample_all(key, sampler, k, s)            # (s, mu)
+        Y = A[:, idxs.reshape(s * mu)]                    # (m_loc, s*mu) local
+        # --- Communication: ONE fused Allreduce ---
+        G, P = _gram_and_proj(Y, r[:, None], axis_name)
+        G4 = G.reshape(s, mu, s, mu)
+        r_proj = P[:, 0].reshape(s, mu)
+
+        def inner(inner_carry, j):
+            x, dx_buf = inner_carry
+            idx_j = idxs[j]
+            Gj = G4[j]                                    # (mu, s, mu)
+            cross = jnp.einsum("ptq,tq->tp", Gj, dx_buf)  # (s, mu)
+            mask = (jnp.arange(s) < j).astype(cfg.dtype)
+            rj = r_proj[j] + jnp.einsum("t,tp->p", mask, cross)
+            v = linalg.power_iteration_max_eig(Gj[:, j, :], cfg.power_iters)
+            eta = 1.0 / v
+            g = x[idx_j] - eta * rj
+            dx = prox(g, eta) - x[idx_j]
+            x = x.at[idx_j].add(dx)
+            dx_buf = dx_buf.at[j].set(dx)
+            return (x, dx_buf), None
+
+        (x, dx_buf), _ = jax.lax.scan(
+            inner, (x, jnp.zeros((s, mu), cfg.dtype)), jnp.arange(s))
+
+        # Deferred residual update (paper Eq. 7 analogue): local GEMV.
+        steps = jnp.einsum("msc,sc->sm", Y.reshape(m_loc, s, mu), dx_buf)
+        r_new = r + jnp.sum(steps, axis=0)
+
+        if cfg.track_objective:
+            r_steps = r[None, :] + jnp.cumsum(steps, axis=0)
+            dx_full = jnp.zeros((s, n), cfg.dtype).at[
+                jnp.arange(s)[:, None], idxs].add(dx_buf)
+            x_steps = (x - jnp.sum(dx_full, 0))[None, :] \
+                + jnp.cumsum(dx_full, axis=0)
+            objs = jax.vmap(
+                lambda rr, xx: _objective(rr, xx, problem, axis_name))(
+                r_steps, x_steps)
+        else:
+            objs = jnp.zeros((s,), cfg.dtype)
+        return (x, r_new), objs
+
+    (x, r), objs = jax.lax.scan(outer, (x0, r0), jnp.arange(K))
+    return SolverResult(x=x, objective=objs.reshape(H), aux={"residual": r})
+
+
+# ---------------------------------------------------------------------------
+# SA-accBCD — paper Algorithm 2.
+# ---------------------------------------------------------------------------
+
+def sa_acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
+                     axis_name: Optional[object] = None) -> SolverResult:
+    A, b, n, mu, q, sampler, prox = _prep(problem, cfg)
+    key = jax.random.key(cfg.seed)
+    s, H = cfg.s, cfg.iterations
+    K = H // s
+    m_loc = A.shape[0]
+
+    theta0 = jnp.asarray(mu / n, cfg.dtype)
+    thetas = linalg.theta_schedule(theta0, H, q)          # (H+1,)
+
+    z0 = jnp.zeros((n,), cfg.dtype)
+    y0 = jnp.zeros((n,), cfg.dtype)
+    ztil0 = -b
+    ytil0 = jnp.zeros_like(b)
+
+    def outer(carry, k):
+        z, y, ztil, ytil = carry
+        idxs = _sample_all(key, sampler, k, s)            # (s, mu)
+        Y = A[:, idxs.reshape(s * mu)]                    # (m_loc, s*mu) local
+        # --- Communication: ONE fused Allreduce (Alg. 2 lines 11-12) ---
+        G, P = _gram_and_proj(Y, jnp.stack([ytil, ztil], axis=1), axis_name)
+        G4 = G.reshape(s, mu, s, mu)
+        y_proj = P[:, 0].reshape(s, mu)                   # A_j^T ytil_sk
+        z_proj = P[:, 1].reshape(s, mu)                   # A_j^T ztil_sk
+        th_prev = jax.lax.dynamic_slice(thetas, (k * s,), (s,))
+        th_cur = jax.lax.dynamic_slice(thetas, (k * s + 1,), (s,))
+        coefU = (1.0 - q * th_prev) / (th_prev * th_prev)  # lines 21-22 coeff
+
+        def inner(inner_carry, j):
+            z, y, dz_buf = inner_carry
+            idx_j = idxs[j]
+            thp = th_prev[j]
+            Gj = G4[j]                                    # (mu, s, mu)
+            cross = jnp.einsum("ptq,tq->tp", Gj, dz_buf)  # (s, mu)
+            # Eq. (3): coefficient (theta_{j-1}^2 * coefU_t - 1) on G[j,t] dz_t
+            coef_t = thp * thp * coefU - 1.0              # (s,)
+            mask = (jnp.arange(s) < j).astype(cfg.dtype)
+            rj = thp * thp * y_proj[j] + z_proj[j] \
+                - jnp.einsum("t,t,tp->p", mask, coef_t, cross)
+            v = linalg.power_iteration_max_eig(Gj[:, j, :],
+                                               cfg.power_iters)  # line 14
+            eta = 1.0 / (q * thp * v)                     # line 15
+            g = z[idx_j] - eta * rj                       # Eq. (4)
+            dz = prox(g, eta) - z[idx_j]                  # Eq. (5)
+            z = z.at[idx_j].add(dz)                       # line 19
+            y = y.at[idx_j].add(-coefU[j] * dz)           # line 21
+            dz_buf = dz_buf.at[j].set(dz)
+            return (z, y, dz_buf), None
+
+        (z, y, dz_buf), _ = jax.lax.scan(
+            inner, (z, y, jnp.zeros((s, mu), cfg.dtype)), jnp.arange(s))
+
+        # Deferred m-dimensional updates (paper Eqs. 7 & 9): local GEMVs.
+        steps = jnp.einsum("msc,sc->sm", Y.reshape(m_loc, s, mu), dz_buf)
+        ztil_new = ztil + jnp.sum(steps, axis=0)
+        ytil_new = ytil - jnp.einsum("t,tm->m", coefU, steps)
+
+        if cfg.track_objective:
+            ztil_steps = ztil[None, :] + jnp.cumsum(steps, axis=0)
+            ytil_steps = ytil[None, :] - jnp.cumsum(
+                coefU[:, None] * steps, axis=0)
+            dz_full = jnp.zeros((s, n), cfg.dtype).at[
+                jnp.arange(s)[:, None], idxs].add(dz_buf)
+            z_steps = (z - jnp.sum(dz_full, 0))[None, :] \
+                + jnp.cumsum(dz_full, axis=0)
+            y_steps = (y + jnp.sum(coefU[:, None] * dz_full, 0))[None, :] \
+                - jnp.cumsum(coefU[:, None] * dz_full, axis=0)
+            th2 = (th_cur * th_cur)[:, None]
+            objs = jax.vmap(
+                lambda rr, xx: _objective(rr, xx, problem, axis_name))(
+                th2 * ytil_steps + ztil_steps, th2 * y_steps + z_steps)
+        else:
+            objs = jnp.zeros((s,), cfg.dtype)
+        return (z, y, ztil_new, ytil_new), objs
+
+    (z, y, ztil, ytil), objs = jax.lax.scan(
+        outer, (z0, y0, ztil0, ytil0), jnp.arange(K))
+    thH = thetas[-1]
+    x = thH * thH * y + z
+    return SolverResult(x=x, objective=objs.reshape(H),
+                        aux={"residual": thH * thH * ytil + ztil})
+
+
+def sa_cd_lasso(problem, cfg, axis_name=None):
+    assert cfg.block_size == 1
+    return sa_bcd_lasso(problem, cfg, axis_name)
+
+
+def sa_acc_cd_lasso(problem, cfg, axis_name=None):
+    assert cfg.block_size == 1
+    return sa_acc_bcd_lasso(problem, cfg, axis_name)

@@ -1,0 +1,122 @@
+"""Problem and solver configuration types for the SA first-order solvers.
+
+The paper (Devarakonda et al., 2017) studies randomized (block) coordinate
+descent for two problem families:
+
+* proximal least-squares:  argmin_x 1/2 ||Ax - b||^2 + g(x)
+  with g in {lasso, elastic-net, group-lasso}
+* linear SVM (dual):       argmin_a 1/2 a^T Qbar a - e^T a,  0 <= a_i <= nu
+
+Both families share a block-sampling + Gram-matrix structure, and both admit
+the synchronization-avoiding (SA) s-step reformulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LassoProblem:
+    """Proximal least-squares problem data.
+
+    A: (m, n) design matrix (m data points, n features). In the distributed
+       solvers A holds the *local row shard*.
+    b: (m,) labels / targets (row-sharded alongside A when distributed).
+    lam: l1 regularization weight (paper uses lam = 100 * sigma_min).
+    l2: optional l2 weight -> elastic net (prox changes, loss unchanged).
+    groups: optional (n,) int array of group ids -> group lasso. Groups must
+       be contiguous, equal-sized blocks; block sampling then samples whole
+       groups (see DESIGN.md "group lasso" note).
+    """
+
+    A: Any
+    b: Any
+    lam: float
+    l2: float = 0.0
+    groups: Optional[Any] = None
+
+    @property
+    def shape(self):
+        return self.A.shape
+
+
+@dataclasses.dataclass(frozen=True)
+class SVMProblem:
+    """Dual linear SVM problem data.
+
+    A: (m, n) data matrix; in the distributed solver A holds the *local
+       column shard* (1D-column partitioning, as in the paper Sec. V).
+    b: (m,) binary labels in {-1, +1} (replicated when distributed).
+    lam: SVM penalty parameter (paper: lam = 1).
+    loss: "l1" (hinge) or "l2" (squared hinge).
+    """
+
+    A: Any
+    b: Any
+    lam: float = 1.0
+    loss: str = "l1"
+
+    @property
+    def gamma(self) -> float:
+        return 0.0 if self.loss == "l1" else 0.5 / self.lam
+
+    @property
+    def nu(self) -> float:
+        return self.lam if self.loss == "l1" else jnp.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Shared solver configuration.
+
+    block_size: mu, the number of coordinates updated per iteration.
+    s: recurrence-unrolling parameter. s=1 recovers the classical method
+       (one Allreduce per iteration); s>1 defers communication for s
+       iterations (one Allreduce per outer iteration, paper Alg. 2 / 4).
+    iterations: H, the total number of *inner* iterations. Must be a
+       multiple of s.
+    accelerated: use the Nesterov-accelerated variant (accCD / accBCD).
+    power_iters: fixed iteration count for the power method computing the
+       largest eigenvalue of the mu x mu Gram block (TPU-friendly
+       replacement for LAPACK eig; exact for mu = 1).
+    track_objective: record the objective after every inner iteration
+       (diagnostic; adds local flops only, plus one reduction per
+       evaluation in the distributed Lasso solver).
+    seed: RNG seed. The same seed on every shard reproduces the paper's
+       "same random generator seed on all processors" requirement; in JAX
+       this replication is structural (the key is part of the replicated
+       program state).
+    """
+
+    block_size: int = 1
+    s: int = 1
+    iterations: int = 100
+    accelerated: bool = True
+    power_iters: int = 32
+    track_objective: bool = True
+    seed: int = 0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if self.iterations % max(self.s, 1) != 0:
+            raise ValueError(
+                f"iterations ({self.iterations}) must be a multiple of s ({self.s})"
+            )
+        if self.s < 1 or self.block_size < 1:
+            raise ValueError("s and block_size must be >= 1")
+
+    @property
+    def outer_iterations(self) -> int:
+        return self.iterations // self.s
+
+
+@dataclasses.dataclass
+class SolverResult:
+    """Solution + per-iteration diagnostics."""
+
+    x: Any                       # (n,) solution (Lasso) / primal vector (SVM)
+    objective: Any               # (H,) objective value after each inner iteration
+    aux: dict = dataclasses.field(default_factory=dict)

@@ -1,0 +1,3 @@
+from repro.data.sparse import make_lasso_dataset, make_svm_dataset, \
+    SYNTHETIC_DATASETS
+from repro.data.tokens import TokenPipeline

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel subpackage follows the repo convention:
+    kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling
+    ops.py    — jit'd public wrapper (shape checks, padding, CPU fallback)
+    ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels:
+    gram            — fused Gram + projection  Y^T [Y | V]  (paper hot spot)
+    sa_inner        — the s-step SA inner loop, entirely in VMEM
+    flash_attention — blocked causal/sliding-window GQA attention
+"""

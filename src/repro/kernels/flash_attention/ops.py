@@ -1,0 +1,177 @@
+"""Public wrapper for flash attention: padding, dispatch, custom_vjp.
+
+Forward: Pallas kernel (TPU target / interpret validation) or jnp
+reference (CPU, dry-run lowering). Backward: reference-path VJP — the
+kernel serves the inference hot path; training backward goes through
+XLA's differentiable attention (DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref as _ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def _pad_seq(x, mult: int):
+    pad = (-x.shape[2]) % mult
+    if pad == 0:
+        return x, 0
+    return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0))), pad
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, scale, use_pallas, interpret):
+    if not (use_pallas or interpret):
+        return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                                  scale=scale)
+    Sq, Sk = q.shape[2], k.shape[2]
+    bq = min(128, max(8, 1 << (Sq - 1).bit_length()))
+    bk = min(128, max(8, 1 << (Sk - 1).bit_length()))
+    qp, pq = _pad_seq(q, bq)
+    kp, _ = _pad_seq(k, bk)
+    vp, _ = _pad_seq(v, bk)
+    # padded keys sit at positions > every real query and are causally
+    # masked out; padded queries produce garbage rows that are sliced off.
+    # The position offset is computed from the UNPADDED lengths so padding
+    # never shifts the causal/window band.
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                 scale=scale, block_q=bq, block_k=bk,
+                                 offset=Sk - Sq, interpret=interpret)
+    return out[:, :, :Sq]
+
+
+def _flash_fwd(q, k, v, causal, window, scale, use_pallas, interpret):
+    return _flash(q, k, v, causal, window, scale, use_pallas, interpret), \
+        (q, k, v)
+
+
+def _flash_bwd(causal, window, scale, use_pallas, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: _ref.attention_ref(q, k, v, causal=causal,
+                                           window=window, scale=scale),
+        q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+import contextlib
+
+# Cost-exact mode: XLA's cost_analysis counts a scan body once, so the
+# roofline cost-extraction lowerings unroll the chunk scan (shapes stay
+# chunk-sized; nothing is ever executed). See repro.launch.dryrun.
+_COST_EXACT = False
+
+
+@contextlib.contextmanager
+def cost_exact_mode():
+    global _COST_EXACT
+    prev = _COST_EXACT
+    _COST_EXACT = True
+    try:
+        yield
+    finally:
+        _COST_EXACT = prev
+
+
+def attention_chunked(q, k, v, *, causal: bool = True, window: int = 0,
+                      scale: float | None = None, q_chunk: int = 1024):
+    """Memory-bounded jnp attention: scan over query chunks so the live
+    score block is (B, H, q_chunk, Sk) instead of (B, H, Sq, Sk).
+
+    This is the XLA path the models use for long sequences when the
+    Pallas kernel is unavailable (CPU tests, dry-run lowering): same math
+    as ref.attention_ref, O(Sq/q_chunk) scan steps, fully differentiable.
+    With ``window`` > 0 each chunk slices only the (q_chunk + window) keys
+    it can see — sliding-window attention costs O(S * window), not O(S^2).
+    GQA is computed grouped (no materialized head repeat).
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    bq = min(q_chunk, Sq)
+    pad = (-Sq) % bq
+    offset = Sk - Sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nc = q.shape[2] // bq
+    qg = q.reshape(B, Hkv, g, nc * bq, D)
+
+    use_kslice = window > 0 and window + bq < Sk
+    kwin = min(window + bq, Sk)
+
+    def body(_, i):
+        qs = jax.lax.dynamic_slice_in_dim(qg, i * bq, bq, axis=3)
+        qpos = i * bq + jnp.arange(bq) + offset
+        if use_kslice:
+            # keys visible to this chunk: [q_start - window + 1, q_end]
+            start = jnp.clip(i * bq + offset - window + 1, 0, Sk - kwin)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, kwin, axis=2)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, kwin, axis=2)
+            kpos = start + jnp.arange(kwin)
+        else:
+            ks, vs = k, v
+            kpos = jnp.arange(Sk)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qs.astype(jnp.float32),
+                       ks.astype(jnp.float32)) * scale
+        mask = jnp.ones((bq, kpos.shape[0]), bool)
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        if window > 0:
+            mask = mask & (kpos[None, :] > qpos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        if CHUNKED_BF16_PROBS:
+            o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(jnp.bfloat16),
+                           vs.astype(jnp.bfloat16))
+        else:
+            o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vs.astype(jnp.float32))
+        return None, o.astype(q.dtype)
+
+    _, chunks = jax.lax.scan(body, None, jnp.arange(nc),
+                             unroll=nc if _COST_EXACT else 1)
+    # chunks: (nc, B, Hkv, g, bq, D) -> (B, Hq, Sq, D)
+    out = chunks.transpose(1, 2, 3, 0, 4, 5).reshape(
+        B, Hq, nc * bq, D)
+    return out[:, :, :Sq]
+
+
+# sequences at or above this length use the chunked path on non-Pallas
+# backends (the S x S score tensor would dominate memory otherwise).
+CHUNKED_THRESHOLD = 2048
+
+# Perf-iteration flag (EXPERIMENTS.md §Perf): cast the post-softmax
+# probabilities to bf16 before the PV contraction — halves the largest
+# live buffer in the chunked path and puts both big matmuls on the bf16
+# MXU path. Softmax itself stays f32 (stability).
+CHUNKED_BF16_PROBS = False
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None, use_pallas: bool = False,
+                    interpret: bool = False):
+    """Blocked GQA attention. q (B,Hq,Sq,D), k/v (B,Hkv,Sk,D).
+
+    ``causal`` masks the future; ``window`` > 0 adds a sliding window
+    (queries attend at most the last ``window`` keys). Dispatch: Pallas
+    kernel (TPU / interpret), chunked-scan jnp for long sequences
+    (CPU & dry-run lowering), dense reference for short ones.
+    """
+    if not causal and window == 0 and (use_pallas or interpret):
+        Sq, Sk = q.shape[2], k.shape[2]
+        if Sq % min(128, Sq) or Sk % min(128, Sk):
+            raise ValueError("bidirectional pallas path needs divisible "
+                             "sequence lengths (padding would unmask)")
+    if not (use_pallas or interpret) and q.shape[2] >= CHUNKED_THRESHOLD:
+        return attention_chunked(q, k, v, causal=causal, window=window,
+                                 scale=scale)
+    return _flash(q, k, v, causal, window, scale, use_pallas, interpret)

@@ -1,0 +1,1 @@
+from repro.kernels.gram.ops import gram_and_proj, gram_t

@@ -1,0 +1,63 @@
+"""Public wrapper for the fused Gram + projection kernel.
+
+Pads inputs to MXU-aligned block multiples, dispatches to the Pallas
+kernel on TPU (or interpret mode when requested) and to the jnp reference
+otherwise. Zero padding is exact: padded rows/columns contribute zeros.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gram import ref as _ref
+from repro.kernels.gram.kernel import gram_t_pallas
+
+
+def _pad_axis(x, mult: int, axis: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _pick_blocks(m: int, p: int, q: int):
+    """VMEM-aware block choice: keep (bm*bi + bm*bj + bi*bj) * 4B well
+    under ~16 MB VMEM while keeping lane dims MXU-aligned (128)."""
+    bi = 128 if p >= 128 else max(8, 1 << (p - 1).bit_length())
+    bj = 128 if q >= 128 else max(8, 1 << (q - 1).bit_length())
+    bm = 512 if m >= 512 else max(8, 1 << (m - 1).bit_length())
+    return bm, bi, bj
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def gram_t(x, y, use_pallas: bool = False, interpret: bool = False):
+    """x^T @ y with f32 accumulation. x (m, p), y (m, q) -> (p, q)."""
+    if not (use_pallas or interpret):
+        return _ref.gram_t_ref(x, y)
+    m, p = x.shape
+    q = y.shape[1]
+    bm, bi, bj = _pick_blocks(m, p, q)
+    xp = _pad_axis(_pad_axis(x, bm, 0), bi, 1)
+    yp = _pad_axis(_pad_axis(y, bm, 0), bj, 1)
+    out = gram_t_pallas(xp, yp, block_m=bm, block_i=bi, block_j=bj,
+                        interpret=interpret)
+    return out[:p, :q]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def gram_and_proj(Y, V, use_pallas: bool = False, interpret: bool = False):
+    """Fused  Y^T [Y | V]  ->  (G, P)  — paper Alg. 2 lines 11-12.
+
+    One pass over Y (per outer iteration) produces both the (c, c) Gram
+    matrix and the (c, k) projections; the caller follows with a single
+    Allreduce of the concatenated result.
+    """
+    c = Y.shape[1]
+    out = gram_t(Y, jnp.concatenate([Y, V], axis=1),
+                 use_pallas=use_pallas, interpret=interpret)
+    return out[:, :c], out[:, c:]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused Gram + projection kernel."""
+import jax.numpy as jnp
+
+
+def gram_t_ref(x, y):
+    """x^T @ y with f32 accumulation: x (m, p), y (m, q) -> (p, q)."""
+    return jnp.dot(x.T.astype(jnp.float32), y.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def gram_and_proj_ref(Y, V):
+    """Fused  Y^T [Y | V]  ->  (G, P): the paper Alg. 2 lines 11-12 pair.
+
+    Y: (m, c) sampled columns; V: (m, k) residual-like vectors.
+    Returns G (c, c) and P (c, k), both f32.
+    """
+    out = gram_t_ref(Y, jnp.concatenate([Y, V], axis=1))
+    c = Y.shape[1]
+    return out[:, :c], out[:, c:]

@@ -1,0 +1,1 @@
+from repro.kernels.sa_inner.ops import sa_inner_loop

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: the SA accelerated inner loop, entirely in VMEM.
+
+TPU-native rethinking of the paper's "redundantly execute the s inner
+iterations on every processor" (Sec. III): on MPI every rank runs scalar
+code between HBM-resident vectors; on TPU we place the replicated
+O((s*mu)^2) state — the Gram matrix, projections, theta schedule and the
+growing dz history — in VMEM once and run all s dependent steps inside a
+single kernel launch with zero intermediate HBM round-trips.
+
+VMEM budget: the dominant resident is G at (s*mu)^2 * 4 bytes; ops.py
+rejects configurations above ~8 MB (half of v5e's ~16 MB VMEM), which
+still admits e.g. s=128, mu=8 or s=1024, mu=1 — the paper's largest
+settings.
+
+Single grid point (the loop is inherently sequential — that is the SA
+trade: these flops are latency-free replicated work).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _power_iter_max_eig(Gjj, iters: int):
+    """Largest eigenvalue of (mu, mu) PSD block via fixed-count power
+    iteration, row-vector form (TPU-friendly shapes)."""
+    mu = Gjj.shape[0]
+    v = jnp.full((1, mu), 1.0 / jnp.sqrt(jnp.float32(mu)), jnp.float32)
+
+    def body(_, v):
+        w = jnp.dot(v, Gjj, preferred_element_type=jnp.float32)
+        nrm = jnp.sqrt(jnp.sum(w * w))
+        return w / jnp.maximum(nrm, 1e-30)
+
+    v = jax.lax.fori_loop(0, iters, body, v)
+    return jnp.sum(jnp.dot(v, Gjj, preferred_element_type=jnp.float32) * v) \
+        / jnp.maximum(jnp.sum(v * v), 1e-30)
+
+
+def _make_kernel(s: int, mu: int, q: float, lam1: float, lam2: float,
+                 power_iters: int):
+    smu = s * mu
+
+    def kernel(G_ref, yproj_ref, zproj_ref, zvals_ref, idx_ref,
+               thprev_ref, coefU_ref, dz_ref, eta_ref):
+        dz_ref[...] = jnp.zeros_like(dz_ref)
+        eta_ref[...] = jnp.zeros_like(eta_ref)
+        idx_flat = idx_ref[...].reshape(1, smu)
+        coefU = coefU_ref[...].reshape(s)
+
+        def body(j, _):
+            thp = thprev_ref[j, 0]
+            Gj = pl.load(G_ref, (pl.dslice(j * mu, mu), slice(None)))
+            # (mu, s*mu)
+
+            dz_flat = dz_ref[...].reshape(1, smu)
+            # per-t weights, broadcast over the mu columns of each block.
+            t_ids = jax.lax.broadcasted_iota(jnp.int32, (s, mu), 0)
+            mask = (t_ids < j).astype(jnp.float32).reshape(1, smu)
+            coef = (thp * thp * coefU - 1.0)
+            coef_rep = jnp.repeat(coef, mu).reshape(1, smu)
+
+            cross = jnp.dot(Gj, (mask * coef_rep * dz_flat).reshape(smu, 1),
+                            preferred_element_type=jnp.float32)   # (mu, 1)
+            rj = thp * thp * yproj_ref[j, :] + zproj_ref[j, :] - cross[:, 0]
+
+            Gjj = pl.load(G_ref, (pl.dslice(j * mu, mu),
+                                  pl.dslice(j * mu, mu)))
+            vmax = _power_iter_max_eig(Gjj, power_iters)
+            eta = 1.0 / (q * thp * vmax)
+
+            # collision-corrected z at this block's coordinates.
+            idx_j = pl.load(idx_ref, (pl.dslice(j, 1), slice(None)))  # (1, mu)
+            eq = (idx_j.reshape(mu, 1) == idx_flat).astype(jnp.float32)
+            zj = zvals_ref[j, :] + jnp.dot(
+                eq, (mask * dz_flat).reshape(smu, 1),
+                preferred_element_type=jnp.float32)[:, 0]
+
+            g = zj - eta * rj
+            shrunk = jnp.sign(g) * jnp.maximum(jnp.abs(g) - lam1 * eta, 0.0)
+            dz = shrunk / (1.0 + 2.0 * eta * lam2) - zj
+
+            pl.store(dz_ref, (pl.dslice(j, 1), slice(None)),
+                     dz.reshape(1, mu))
+            pl.store(eta_ref, (pl.dslice(j, 1), slice(None)),
+                     eta.reshape(1, 1))
+            return 0
+
+        jax.lax.fori_loop(0, s, body, 0)
+
+    return kernel
+
+
+def sa_inner_pallas(G, y_proj, z_proj, z_vals, idx, th_prev, coefU,
+                    *, q: float, lam1: float, lam2: float = 0.0,
+                    power_iters: int = 32, interpret: bool = False):
+    """Run the s-step inner loop in one kernel. All inputs are the
+    replicated post-Allreduce quantities; see ref.py for shapes."""
+    s, mu = y_proj.shape
+    kernel = _make_kernel(s, mu, float(q), float(lam1), float(lam2),
+                          power_iters)
+    dz, etas = pl.pallas_call(
+        kernel,
+        out_shape=(jax.ShapeDtypeStruct((s, mu), jnp.float32),
+                   jax.ShapeDtypeStruct((s, 1), jnp.float32)),
+        interpret=interpret,
+    )(G.astype(jnp.float32), y_proj.astype(jnp.float32),
+      z_proj.astype(jnp.float32), z_vals.astype(jnp.float32),
+      idx.astype(jnp.int32), th_prev.reshape(s, 1).astype(jnp.float32),
+      coefU.reshape(s, 1).astype(jnp.float32))
+    return dz, etas[:, 0]

@@ -1,0 +1,35 @@
+"""Public wrapper for the fused SA inner loop."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sa_inner import ref as _ref
+from repro.kernels.sa_inner.kernel import sa_inner_pallas
+
+# Reject configurations whose Gram matrix would not leave room in VMEM
+# (~16 MB on v5e; we cap the resident G at half of it).
+_VMEM_G_BYTES_CAP = 8 * 1024 * 1024
+
+
+def vmem_ok(s: int, mu: int) -> bool:
+    return (s * mu) ** 2 * 4 <= _VMEM_G_BYTES_CAP
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "q", "lam1", "lam2", "power_iters", "use_pallas", "interpret"))
+def sa_inner_loop(G, y_proj, z_proj, z_vals, idx, th_prev, coefU,
+                  q: float, lam1: float, lam2: float = 0.0,
+                  power_iters: int = 32,
+                  use_pallas: bool = False, interpret: bool = False):
+    """Dispatch the s-step SA inner loop (see ref.py for semantics)."""
+    s, mu = y_proj.shape
+    if (use_pallas or interpret) and vmem_ok(s, mu):
+        return sa_inner_pallas(
+            G, y_proj, z_proj, z_vals, idx, th_prev, coefU,
+            q=q, lam1=lam1, lam2=lam2, power_iters=power_iters,
+            interpret=interpret)
+    return _ref.sa_inner_ref(G, y_proj, z_proj, z_vals, idx, th_prev,
+                             coefU, q, lam1, lam2, power_iters)

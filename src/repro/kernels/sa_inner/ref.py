@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for the SA accelerated inner loop (paper Alg. 2 lines
+13-22, specialized to Lasso / elastic-net prox).
+
+Given the replicated outputs of the single Allreduce — the Gram matrix G,
+the projections y_proj = A_j^T ytil_sk / z_proj = A_j^T ztil_sk, the
+sampled-coordinate values z_vals = z_sk[idx] and the theta schedule — run
+the s dependent inner steps and return (dz, etas). This mirrors exactly
+what repro.core.sa_lasso does inside its inner scan; the kernel version
+keeps all of it in VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linalg import power_iteration_max_eig
+
+
+def sa_inner_ref(G, y_proj, z_proj, z_vals, idx, th_prev, coefU,
+                 q: float, lam1: float, lam2: float = 0.0,
+                 power_iters: int = 32):
+    """Reference s-step inner loop.
+
+    G:      (s*mu, s*mu) replicated Gram matrix Y^T Y
+    y_proj: (s, mu)   A_j^T ytil_sk
+    z_proj: (s, mu)   A_j^T ztil_sk
+    z_vals: (s, mu)   z_sk gathered at each block's coordinates
+    idx:    (s, mu)   sampled coordinate ids (for collision corrections)
+    th_prev:(s,)      theta_{sk+j-1}
+    coefU:  (s,)      (1 - q*theta_{sk+j-1}) / theta_{sk+j-1}^2
+    Returns (dz (s, mu), etas (s,)).
+    """
+    s, mu = y_proj.shape
+    G4 = G.reshape(s, mu, s, mu)
+    idx_flat = idx.reshape(s * mu)
+
+    def body(carry, j):
+        dz_buf = carry
+        thp = th_prev[j]
+        Gj = G4[j]                                     # (mu, s, mu)
+        cross = jnp.einsum("ptq,tq->tp", Gj, dz_buf)   # (s, mu)
+        coef_t = thp * thp * coefU - 1.0
+        mask = (jnp.arange(s) < j).astype(G.dtype)
+        rj = thp * thp * y_proj[j] + z_proj[j] \
+            - jnp.einsum("t,t,tp->p", mask, coef_t, cross)
+        v = power_iteration_max_eig(Gj[:, j, :], power_iters)
+        eta = 1.0 / (q * thp * v)
+        # collision-corrected current z at this block's coordinates.
+        eq = (idx[j][:, None] == idx_flat[None, :]).astype(G.dtype)
+        w = (mask[:, None] * dz_buf).reshape(s * mu)
+        zj = z_vals[j] + eq @ w
+        g = zj - eta * rj
+        shrunk = jnp.sign(g) * jnp.maximum(jnp.abs(g) - lam1 * eta, 0.0)
+        dz = shrunk / (1.0 + 2.0 * eta * lam2) - zj
+        dz_buf = dz_buf.at[j].set(dz)
+        return dz_buf, eta
+
+    dz_buf, etas = jax.lax.scan(
+        body, jnp.zeros((s, mu), G.dtype), jnp.arange(s))
+    return dz_buf, etas

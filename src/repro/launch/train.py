@@ -1,0 +1,62 @@
+"""Training launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --smoke --steps 50 --ckpt-dir /tmp/ckpt
+
+--smoke uses the reduced same-family config (CPU-feasible); the full
+configs are exercised via the dry-run. The driver provides checkpointing,
+restart, failure handling and elastic re-meshing (repro.runtime.driver).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.data.tokens import TokenPipeline
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.runtime.driver import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=10)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    arch = get_smoke_config(args.arch) if args.smoke \
+        else get_config(args.arch)
+    pipeline = TokenPipeline(vocab_size=arch.vocab_size,
+                             global_batch=args.global_batch,
+                             seq_len=args.seq_len, seed=args.seed)
+    optimizer = AdamW(learning_rate=cosine_schedule(
+        args.lr, args.warmup, args.steps))
+    cfg = TrainerConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                        ckpt_every=args.ckpt_every,
+                        microbatches=args.microbatches,
+                        remat=args.remat, model_axis=args.model_axis,
+                        seed=args.seed)
+    trainer = Trainer(arch, optimizer, pipeline, cfg)
+    out = trainer.run()
+    losses = out["losses"]
+    print(f"arch={arch.name} steps={out['final_step']} "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    for e in out["events"]:
+        print("event:", e)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model zoo: composable JAX blocks covering the assigned architectures."""

@@ -1,0 +1,298 @@
+"""Recurrent / state-space layers: a chunkwise gated linear-recurrence
+primitive (the TPU-native form of Mamba-2/SSD, GLA, RetNet and mLSTM) plus
+the blocks built on it, and the strictly sequential sLSTM.
+
+TPU adaptation note (DESIGN.md §Hardware adaptation): CUDA Mamba uses a
+fused selective-scan kernel over a diagonal SSM state. The TPU-native
+equivalent is the *chunkwise* algorithm: within a chunk of length C the
+recurrence is computed in closed form with an MXU-friendly (C x C)
+decay-masked matmul; across chunks a (d_k x d_v) state is carried by a
+scan over T/C steps. States materialize only at chunk boundaries, bounding
+activation memory at T/C * d_k * d_v instead of T * d_k * d_v.
+
+  o_t = q_t . S_t,   S_t = a_t * S_{t-1} + k_t v_t^T          (per head)
+
+with input-dependent scalar-per-head decay a_t in (0, 1] — the Mamba-2 /
+SSD simplification of Mamba-1's per-channel decay (recorded as an
+assumption change). ``ssm_state`` from the configs is the key dim d_k.
+
+mLSTM (xLSTM) is the same recurrence with exponential input gates folded
+into k and a normalizer row n_t = a_t n_{t-1} + k_t tracked alongside
+(output h = (S q) / max(|n . q|, 1)); the log-domain max-stabilizer of the
+paper is replaced by f32 accumulation (assumption change, DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init, act_fn
+
+
+# ---------------------------------------------------------------------------
+# Chunkwise gated linear recurrence (shared primitive)
+# ---------------------------------------------------------------------------
+
+def chunked_gla(q, k, v, log_a, *, chunk: int = 128,
+                normalize: bool = False, state0=None, norm0=None):
+    """q, k: (B, H, T, dk); v: (B, H, T, dv); log_a: (B, H, T) <= 0.
+
+    Returns (o (B, H, T, dv), final_state (B, H, dk, dv), final_norm).
+    ``normalize=True`` adds the mLSTM normalizer denominator.
+    """
+    B, H, T, dk = q.shape
+    dv = v.shape[-1]
+    C = min(chunk, T)
+    assert T % C == 0, (T, C)
+    N = T // C
+    f32 = jnp.float32
+
+    qc = q.astype(f32).reshape(B, H, N, C, dk)
+    kc = k.astype(f32).reshape(B, H, N, C, dk)
+    vc = v.astype(f32).reshape(B, H, N, C, dv)
+    la = log_a.astype(f32).reshape(B, H, N, C)
+
+    cum = jnp.cumsum(la, axis=-1)                     # within-chunk cumsum
+    total = cum[..., -1]                              # (B, H, N)
+
+    # ---- intra-chunk: decay-masked (C x C) attention matmul ------------
+    # scores[i, j] = (q_i . k_j) * exp(cum_i - cum_j)  for j <= i
+    rel = cum[..., :, None] - cum[..., None, :]       # (B, H, N, C, C)
+    causal = jnp.tril(jnp.ones((C, C), bool))
+    decay = jnp.where(causal, jnp.exp(rel), 0.0)
+    scores = jnp.einsum("bhnid,bhnjd->bhnij", qc, kc) * decay
+    o_intra = jnp.einsum("bhnij,bhnjv->bhniv", scores, vc)
+    # normalizer: q_i . n_i = sum_j decay_ij (q_i . k_j) = row-sum of scores
+    n_intra = scores.sum(-1) if normalize else None
+
+    # ---- inter-chunk: scan over chunk boundaries ------------------------
+    # contribution of state S entering the chunk:  o_i += exp(cum_i) q_i S
+    # state update: S' = exp(total) S + sum_j exp(total - cum_j) k_j v_j^T
+    k_scaled = kc * jnp.exp(total[..., None, None] - cum[..., None])
+    kv = jnp.einsum("bhnjd,bhnjv->bhndv", k_scaled, vc)   # per-chunk outer
+    ksum = k_scaled.sum(axis=-2) if normalize else None   # (B, H, N, dk)
+    q_scaled = qc * jnp.exp(cum[..., None])
+
+    S0 = jnp.zeros((B, H, dk, dv), f32) if state0 is None \
+        else state0.astype(f32)
+    n0 = jnp.zeros((B, H, dk), f32) if norm0 is None else norm0.astype(f32)
+
+    def body(carry, xs):
+        S, n = carry
+        qs, kv_n, tot, ks = xs
+        o_inter = jnp.einsum("bhid,bhdv->bhiv", qs, S)
+        n_inter = jnp.einsum("bhid,bhd->bhi", qs, n)
+        S = jnp.exp(tot)[..., None, None] * S + kv_n
+        n = jnp.exp(tot)[..., None] * n + ks
+        return (S, n), (o_inter, n_inter)
+
+    xs = (q_scaled.transpose(2, 0, 1, 3, 4), kv.transpose(2, 0, 1, 3, 4),
+          total.transpose(2, 0, 1),
+          (ksum if normalize else jnp.zeros((B, H, N, dk), f32))
+          .transpose(2, 0, 1, 3))
+    # NOTE: no cost-exact unroll here — the O(T*C) intra-chunk matmuls
+    # are batched OUTSIDE this scan (counted exactly); the per-chunk
+    # boundary terms inside are O(dk*dv) and negligible (DESIGN.md).
+    (S, n), (o_inter, n_inter) = jax.lax.scan(body, (S0, n0), xs)
+    o = o_intra + o_inter.transpose(1, 2, 0, 3, 4)
+
+    if normalize:
+        denom = n_intra + n_inter.transpose(1, 2, 0, 3).reshape(B, H, N, C)
+        denom = jnp.maximum(jnp.abs(denom), 1.0)[..., None]
+        o = o / denom
+    return (o.reshape(B, H, T, dv).astype(q.dtype),
+            S.astype(f32), n.astype(f32))
+
+
+def gla_step(q, k, v, log_a, state, norm=None, *, normalize: bool = False):
+    """Single-token recurrence step (decode). q/k: (B, H, dk); v: (B, H, dv);
+    log_a: (B, H); state: (B, H, dk, dv). Returns (o, state', norm')."""
+    f32 = jnp.float32
+    a = jnp.exp(log_a.astype(f32))[..., None, None]
+    state = a * state + jnp.einsum("bhd,bhv->bhdv", k.astype(f32),
+                                   v.astype(f32))
+    o = jnp.einsum("bhd,bhdv->bhv", q.astype(f32), state)
+    if normalize:
+        norm = a[..., 0] * norm + k.astype(f32)
+        denom = jnp.maximum(jnp.abs(
+            jnp.einsum("bhd,bhd->bh", q.astype(f32), norm)), 1.0)[..., None]
+        o = o / denom
+    return o.astype(q.dtype), state, norm
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style SSM heads (used standalone and inside the hymba hybrid block)
+# ---------------------------------------------------------------------------
+
+def init_ssm_heads(key, d_model: int, n_heads: int, dk: int, dtype) -> Dict:
+    dv = d_model // n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": _dense_init(ks[0], (d_model, n_heads * dk), dtype),
+        "wk": _dense_init(ks[1], (d_model, n_heads * dk), dtype),
+        "wv": _dense_init(ks[2], (d_model, n_heads * dv), dtype),
+        "w_decay": _dense_init(ks[3], (d_model, n_heads), jnp.float32),
+        "b_decay": jnp.full((n_heads,), 2.0, jnp.float32),
+        "w_gate": _dense_init(ks[4], (d_model, n_heads * dv), dtype),
+        "wo": _dense_init(ks[5], (n_heads * dv, d_model), dtype),
+    }
+
+
+def _ssm_qkva(params, x, n_heads: int, dk: int):
+    B, S, D = x.shape
+    dv = D // n_heads
+    q = (x @ params["wq"]).reshape(B, S, n_heads, dk).transpose(0, 2, 1, 3)
+    k = (x @ params["wk"]).reshape(B, S, n_heads, dk).transpose(0, 2, 1, 3)
+    v = (x @ params["wv"]).reshape(B, S, n_heads, dv).transpose(0, 2, 1, 3)
+    # input-dependent decay in (0, 1):  a = sigmoid(w x + b)
+    la = jax.nn.log_sigmoid(
+        x.astype(jnp.float32) @ params["w_decay"] + params["b_decay"])
+    la = la.transpose(0, 2, 1)                           # (B, H, S)
+    return q, k, v, la
+
+
+def ssm_heads_train(params, x, *, n_heads: int, dk: int, chunk: int = 128):
+    """Full-sequence SSM heads. Returns (out, final_state)."""
+    B, S, D = x.shape
+    q, k, v, la = _ssm_qkva(params, x, n_heads, dk)
+    o, state, _ = chunked_gla(q, k, v, la, chunk=chunk)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, D)
+    gate = act_fn("silu")(x @ params["w_gate"])
+    return (o * gate) @ params["wo"], state
+
+
+def ssm_heads_step(params, x, state, *, n_heads: int, dk: int):
+    """Single-token SSM step: x (B, 1, D); state (B, H, dk, dv)."""
+    B, _, D = x.shape
+    q, k, v, la = _ssm_qkva(params, x, n_heads, dk)
+    o, state, _ = gla_step(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                           la[:, :, 0], state)
+    o = o.reshape(B, 1, D)
+    gate = act_fn("silu")(x @ params["w_gate"])
+    return (o * gate) @ params["wo"], state
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (parallel) and sLSTM (sequential) blocks
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d_model: int, n_heads: int, dtype) -> Dict:
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": _dense_init(ks[0], (d_model, d_model), dtype),
+        "wk": _dense_init(ks[1], (d_model, d_model), dtype),
+        "wv": _dense_init(ks[2], (d_model, d_model), dtype),
+        "w_i": _dense_init(ks[3], (d_model, n_heads), jnp.float32),
+        "w_f": _dense_init(ks[4], (d_model, n_heads), jnp.float32),
+        "b_f": jnp.full((n_heads,), 3.0, jnp.float32),
+        "w_gate": _dense_init(ks[5], (d_model, d_model), dtype),
+        "wo": _dense_init(ks[6], (d_model, d_model), dtype),
+    }
+
+
+def _mlstm_qkvifa(params, x, n_heads: int):
+    B, S, D = x.shape
+    dh = D // n_heads
+
+    def heads(w):
+        return (x @ w).reshape(B, S, n_heads, dh).transpose(0, 2, 1, 3)
+
+    q = heads(params["wq"]) / (dh ** 0.5)
+    k = heads(params["wk"])
+    v = heads(params["wv"])
+    xf = x.astype(jnp.float32)
+    # exponential input gate folded into k (sigmoid-bounded for stability —
+    # stands in for the paper's log-domain stabilizer, DESIGN.md).
+    i_gate = jax.nn.sigmoid(xf @ params["w_i"]).transpose(0, 2, 1)
+    la = jax.nn.log_sigmoid(xf @ params["w_f"] + params["b_f"])
+    la = la.transpose(0, 2, 1)
+    k = k * i_gate[..., None].astype(k.dtype)
+    return q, k, v, la
+
+
+def mlstm_train(params, x, *, n_heads: int, chunk: int = 128):
+    B, S, D = x.shape
+    q, k, v, la = _mlstm_qkvifa(params, x, n_heads)
+    o, state, norm = chunked_gla(q, k, v, la, chunk=chunk, normalize=True)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, D)
+    gate = act_fn("silu")(x @ params["w_gate"])
+    return (o * gate) @ params["wo"], (state, norm)
+
+
+def mlstm_step(params, x, state, norm, *, n_heads: int):
+    B, _, D = x.shape
+    q, k, v, la = _mlstm_qkvifa(params, x, n_heads)
+    o, state, norm = gla_step(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                              la[:, :, 0], state, norm, normalize=True)
+    o = o.reshape(B, 1, D)
+    gate = act_fn("silu")(x @ params["w_gate"])
+    return (o * gate) @ params["wo"], (state, norm)
+
+
+def init_slstm(key, d_model: int, n_heads: int, dtype) -> Dict:
+    """sLSTM with block-diagonal (per-head) recurrent weights."""
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 9)
+    p = {"wo": _dense_init(ks[8], (d_model, d_model), dtype)}
+    for i, g in enumerate(("z", "i", "f", "o")):
+        p[f"w_{g}"] = _dense_init(ks[i], (d_model, d_model), dtype)
+        p[f"r_{g}"] = _dense_init(ks[4 + i], (n_heads, dh, dh), jnp.float32,
+                                  scale=dh ** -0.5)
+    return p
+
+
+def slstm_train(params, x, *, n_heads: int, state0=None):
+    """Strictly sequential sLSTM scan over time (memory mixing forbids a
+    parallel form — xLSTM paper Sec. 2). x: (B, S, D)."""
+    B, S, D = x.shape
+    dh = D // n_heads
+    f32 = jnp.float32
+
+    pre = {g: (x @ params[f"w_{g}"]).astype(f32)
+           .reshape(B, S, n_heads, dh) for g in ("z", "i", "f", "o")}
+
+    if state0 is None:
+        # all-zero initial state, matching the decode cache's zero init
+        # (the h = c / max(|n|, 1) normalizer is well-defined at n = 0).
+        c0 = jnp.zeros((B, n_heads, dh), f32)
+        n0 = jnp.zeros((B, n_heads, dh), f32)
+        h0 = jnp.zeros((B, n_heads, dh), f32)
+        m0 = jnp.zeros((B, n_heads, dh), f32)
+    else:
+        c0, n0, h0, m0 = state0
+
+    R = {g: params[f"r_{g}"].astype(f32) for g in ("z", "i", "f", "o")}
+
+    def step(carry, xs):
+        c, n, h, m = carry
+        pz, pi, pf, po = xs
+
+        def rec(g):
+            return jnp.einsum("bhd,hde->bhe", h, R[g])
+
+        zt = jnp.tanh(pz + rec("z"))
+        it_ = pi + rec("i")                      # log-domain input gate
+        ft_ = pf + rec("f")
+        # log-domain stabilizer (xLSTM Eq. 15):
+        m_new = jnp.maximum(ft_ + m, it_)
+        i_s = jnp.exp(it_ - m_new)
+        f_s = jnp.exp(ft_ + m - m_new)
+        c = f_s * c + i_s * zt
+        n = f_s * n + i_s
+        ot = jax.nn.sigmoid(po + rec("o"))
+        h = ot * c / jnp.maximum(jnp.abs(n), 1.0)
+        return (c, n, h, m_new), h
+
+    xs = tuple(pre[g].transpose(1, 0, 2, 3) for g in ("z", "i", "f", "o"))
+    (c, n, h, m), hs = jax.lax.scan(step, (c0, n0, h0, m0), xs)
+    out = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    return out @ params["wo"], (c, n, h, m)
+
+
+def slstm_step(params, x, state, *, n_heads: int):
+    """Single-token sLSTM step via the train path with S=1."""
+    out, state = slstm_train(params, x, n_heads=n_heads, state0=state)
+    return out, state

@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.optim.compress import (quantize_int8, dequantize_int8,
+                                  compressed_psum, ErrorFeedback)

@@ -1,0 +1,82 @@
+"""AdamW with f32 state, global-norm clipping and cosine schedule.
+
+State pytrees mirror the param tree, so the param PartitionSpecs apply
+verbatim to both moments — under FSDP this is ZeRO-style sharded
+optimizer state for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int,
+                    min_ratio: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps)
+                     / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, base_lr * cos)
+    return lr
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Dict
+    nu: Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                          nu=jax.tree.map(jnp.copy, zeros))
+
+    def state_specs(self, param_specs_tree):
+        """PartitionSpecs for the state, mirroring the param specs."""
+        from jax.sharding import PartitionSpec as P
+        return AdamWState(step=P(), mu=param_specs_tree,
+                          nu=jax.tree.map(lambda s: s, param_specs_tree))
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Dict, AdamWState]:
+        step = state.step + 1
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm > 0:
+            gnorm = jnp.sqrt(sum(jnp.sum(g * g)
+                                 for g in jax.tree.leaves(gf)))
+            scale = jnp.minimum(1.0, self.clip_norm
+                                / jnp.maximum(gnorm, 1e-9))
+            gf = jax.tree.map(lambda g: g * scale, gf)
+        mu = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                          state.mu, gf)
+        nu = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g,
+                          state.nu, gf)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+        lr = self.learning_rate(step) if callable(self.learning_rate) \
+            else self.learning_rate
+
+        def upd(p, m, v):
+            mh = m / bc1
+            vh = v / bc2
+            delta = mh / (jnp.sqrt(vh) + self.eps) \
+                + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)

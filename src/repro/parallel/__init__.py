@@ -1,0 +1,3 @@
+from repro.parallel.sharding import (param_partition_specs,
+                                     batch_partition_specs, dp_axes,
+                                     named_shardings)

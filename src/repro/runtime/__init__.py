@@ -1,0 +1,3 @@
+from repro.runtime.driver import Trainer, TrainerConfig
+from repro.runtime.failures import FailureInjector
+from repro.runtime.stragglers import StragglerMonitor

@@ -1,0 +1,26 @@
+"""Deterministic failure injection for fault-tolerance tests/demos.
+
+Schedules host failures at given steps; the Trainer consults the injector
+every step and runs its restart/elastic path when a failure fires —
+exactly the code path a real coordination-service callback would take.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """failures: {step: [host_ids]} — hosts that die at that step."""
+    failures: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
+    fired: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+
+    def check(self, step: int) -> List[int]:
+        # pop: a failure fires exactly once — after the driver restores to
+        # an earlier step and replays past the failure point, the hosts
+        # are already gone and must not "die" again.
+        hosts = self.failures.pop(step, [])
+        for h in hosts:
+            self.fired.append((step, h))
+        return hosts

@@ -1,0 +1,71 @@
+"""Straggler detection and mitigation bookkeeping.
+
+On a real pod the per-host step times come from the coordination service
+heartbeats; here they are fed in by the driver (measured or simulated).
+Detection: a host is a straggler when its EMA step time exceeds
+``threshold`` x the median EMA across hosts for ``patience`` consecutive
+steps. Mitigation policy (returned as an action for the driver):
+
+  * "rebalance" — shrink the straggler's microbatch share (gradual skew)
+  * "evict"     — persistent straggler: treat as failed, trigger the
+                  elastic re-mesh path (same as a hard failure)
+
+This mirrors production practice (e.g. Borg/TPU pod doctors): detection
+is centralized and cheap; mitigation reuses the failure machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    n_hosts: int
+    ema_decay: float = 0.8
+    threshold: float = 1.5
+    patience: int = 3
+    evict_after: int = 8
+
+    def __post_init__(self):
+        self._ema: List[Optional[float]] = [None] * self.n_hosts
+        self._strikes: List[int] = [0] * self.n_hosts
+
+    def record(self, host_times: Dict[int, float]) -> Dict[int, str]:
+        """Feed one step's per-host times; returns {host: action}."""
+        for h, t in host_times.items():
+            prev = self._ema[h]
+            self._ema[h] = t if prev is None \
+                else self.ema_decay * prev + (1 - self.ema_decay) * t
+        live = sorted(e for e in self._ema if e is not None)
+        if not live:
+            return {}
+        median = live[len(live) // 2]
+        actions: Dict[int, str] = {}
+        for h, e in enumerate(self._ema):
+            if e is None:
+                continue
+            if e > self.threshold * median:
+                self._strikes[h] += 1
+            else:
+                self._strikes[h] = 0
+            if self._strikes[h] >= self.evict_after:
+                actions[h] = "evict"
+            elif self._strikes[h] >= self.patience:
+                actions[h] = "rebalance"
+        return actions
+
+    def drop_host(self, host: int):
+        self._ema[host] = None
+        self._strikes[host] = 0
+
+    def microbatch_weights(self) -> List[float]:
+        """Per-host work shares inversely proportional to EMA step time
+        (the 'rebalance' mitigation). Sums to n_live."""
+        live = [(h, e) for h, e in enumerate(self._ema) if e is not None]
+        if not live:
+            return []
+        inv = [1.0 / e for _, e in live]
+        s = sum(inv)
+        n = len(live)
+        return [n * x / s for x in inv]

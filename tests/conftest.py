@@ -1,0 +1,31 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def lasso_data():
+    """Small well-conditioned lasso problem with a planted sparse x."""
+    rng = np.random.default_rng(0)
+    m, n = 200, 60
+    A = rng.standard_normal((m, n)).astype(np.float32)
+    x_true = np.zeros(n, dtype=np.float32)
+    x_true[:8] = rng.standard_normal(8)
+    b = (A @ x_true + 0.1 * rng.standard_normal(m)).astype(np.float32)
+    lam = 0.1 * float(np.abs(A.T @ b).max())
+    return A, b, lam
+
+
+@pytest.fixture(scope="session")
+def svm_data():
+    rng = np.random.default_rng(1)
+    m, n = 160, 48
+    A = rng.standard_normal((m, n)).astype(np.float32)
+    w = rng.standard_normal(n).astype(np.float32)
+    b = np.sign(A @ w + 0.1 * rng.standard_normal(m)).astype(np.float32)
+    b[b == 0] = 1.0
+    return A, b

@@ -1,0 +1,67 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_checkpoint, save_checkpoint)
+
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,), jnp.int32),
+                       "c": jnp.asarray(2.5)}}
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 7, tree, extra={"note": "x"})
+    assert latest_step(str(tmp_path)) == 7
+    restored, extra = restore_checkpoint(str(tmp_path), tree_like=tree)
+    assert extra["note"] == "x"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_specs_roundtrip_and_mesh_placement(tmp_path):
+    tree = _tree()
+    specs = {"a": P(None, None), "nested": {"b": P(None), "c": P()}}
+    save_checkpoint(str(tmp_path), 1, tree, specs=specs)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    restored, _ = restore_checkpoint(str(tmp_path), tree_like=tree,
+                                     mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+
+
+def test_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree())
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_"))
+    assert steps == [3, 4]
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    tree = _tree()
+    mgr.save(5, tree)
+    restored, _ = mgr.restore_latest(tree_like=tree)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+
+
+def test_atomicity_no_partial_dirs(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    entries = [d for d in os.listdir(tmp_path) if d.startswith(".tmp")]
+    assert entries == []
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path))

@@ -1,0 +1,76 @@
+"""Paper Table I properties + machine-model sanity (Fig. 4 shape)."""
+import math
+
+import pytest
+
+from repro.core.cost_model import (Machine, PAPER_DATASETS, ProblemDims,
+                                   best_s, lasso_costs, lasso_speedup,
+                                   predicted_time, svm_costs, svm_speedup)
+
+DIMS = ProblemDims(m=100_000, n=10_000, f=0.01)
+
+
+def test_latency_drops_by_s():
+    c1 = lasso_costs(DIMS, H=1024, mu=8, s=1, P=256)
+    c16 = lasso_costs(DIMS, H=1024, mu=8, s=16, P=256)
+    assert c16["L"] == pytest.approx(c1["L"] / 16)
+
+
+def test_flops_and_bandwidth_grow_by_s():
+    c1 = lasso_costs(DIMS, H=1024, mu=8, s=1, P=256)
+    c16 = lasso_costs(DIMS, H=1024, mu=8, s=16, P=256)
+    # the data-dependent flop term scales by exactly s; the H*mu^3
+    # subproblem term is s-independent.
+    assert c16["W"] == pytest.approx(16 * c1["W"])
+    sub = 1024 * 8 ** 3
+    assert c16["F"] - sub == pytest.approx(16 * (c1["F"] - sub))
+    # memory grows with the s^2 Gram term
+    assert c16["M"] > c1["M"]
+
+
+def test_speedup_has_interior_optimum():
+    """Fig. 4e-h: speedup rises with s then falls once bandwidth/flops
+    dominate -> best_s is interior for a latency-dominated machine."""
+    machine = Machine("latency-heavy", alpha=1e-4, beta=1e-10, gamma=1e-12)
+    s_star, sp = best_s(DIMS, H=4096, mu=4, P=4096, machine=machine)
+    assert sp > 1.5
+    assert 1 < s_star <= 1024
+    # monotone decline after a much larger s
+    sp_huge = lasso_speedup(DIMS, 4096, 4, 8192, 4096, machine)
+    assert sp_huge < sp
+
+
+def test_speedup_at_s1_is_unity():
+    m = Machine.cray_xc30()
+    assert lasso_speedup(DIMS, 100, 4, 1, 64, m) == pytest.approx(1.0)
+    assert svm_speedup(DIMS, 100, 1, 64, m) == pytest.approx(1.0)
+
+
+def test_paper_scale_speedups_plausible():
+    """On Cray-XC30-like parameters at paper scale (P up to 12k cores,
+    sparse datasets), predicted best-s speedups land in the paper's
+    reported 1.2x-5.1x band (order-of-magnitude check, not a fit)."""
+    m = Machine.cray_xc30()
+    found = []
+    for name in ("news20", "covtype", "url", "epsilon"):
+        d = PAPER_DATASETS[name]
+        s_star, sp = best_s(d, H=10_000, mu=1, P=1024, machine=m)
+        found.append(sp)
+    assert all(1.0 < sp < 40 for sp in found)
+    assert any(sp > 1.5 for sp in found)
+
+
+def test_svm_latency_model():
+    c1 = svm_costs(DIMS, H=512, s=1, P=128)
+    c8 = svm_costs(DIMS, H=512, s=8, P=128)
+    assert c8["L"] == pytest.approx(c1["L"] / 8)
+    assert c8["W"] == pytest.approx(8 * c1["W"])
+
+
+def test_predicted_time_positive_and_additive():
+    m = Machine.tpu_v5e_pod()
+    c = lasso_costs(DIMS, H=256, mu=8, s=4, P=256)
+    t = predicted_time(c, m)
+    assert t > 0
+    assert t == pytest.approx(m.gamma * c["F"] + m.beta * c["W"]
+                              + m.alpha * c["L"] + m.kappa * c["I"])

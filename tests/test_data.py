@@ -1,0 +1,71 @@
+import numpy as np
+import pytest
+
+from repro.data.sparse import (SYNTHETIC_DATASETS, make_lasso_dataset,
+                               make_svm_dataset)
+from repro.data.tokens import TokenPipeline
+
+
+def test_pipeline_deterministic():
+    p1 = TokenPipeline(vocab_size=100, global_batch=8, seq_len=16, seed=3)
+    p2 = TokenPipeline(vocab_size=100, global_batch=8, seq_len=16, seed=3)
+    t1, y1 = p1.batch_at(5)
+    t2, y2 = p2.batch_at(5)
+    np.testing.assert_array_equal(t1, t2)
+    np.testing.assert_array_equal(y1, y2)
+    t3, _ = p1.batch_at(6)
+    assert not np.array_equal(t1, t3)
+
+
+def test_targets_are_shifted_tokens():
+    p = TokenPipeline(vocab_size=50, global_batch=2, seq_len=8, seed=0)
+    t, y = p.batch_at(0)
+    # token stream continuity: targets[i] == tokens[i+1]
+    np.testing.assert_array_equal(t[:, 1:], y[:, :-1])
+
+
+def test_shard_invariance_across_topologies():
+    """The elastic-scaling invariant: concatenating the shards of ANY
+    shard count reproduces the same global batch."""
+    p = TokenPipeline(vocab_size=64, global_batch=12, seq_len=8, seed=1)
+    g_tokens, _ = p.batch_at(3)
+    for n_shards in (1, 2, 3, 4, 6):
+        parts = [p.shard_at(3, s, n_shards)[0] for s in range(n_shards)]
+        np.testing.assert_array_equal(np.concatenate(parts), g_tokens)
+
+
+def test_checkpoint_restore_resumes():
+    p = TokenPipeline(vocab_size=64, global_batch=4, seq_len=8, seed=1)
+    next(p)
+    next(p)
+    ck = p.checkpoint()
+    expected, _ = p.batch_at(2)
+    p2 = TokenPipeline.restore(ck)
+    got, _ = next(p2)
+    np.testing.assert_array_equal(got, expected)
+
+
+def test_zipf_distribution_is_skewed():
+    p = TokenPipeline(vocab_size=1000, global_batch=16, seq_len=64, seed=0)
+    t, _ = p.batch_at(0)
+    # low-rank (common) tokens dominate
+    assert np.mean(t < 100) > 0.5
+
+
+@pytest.mark.parametrize("name", list(SYNTHETIC_DATASETS))
+def test_synthetic_regimes(name):
+    spec = SYNTHETIC_DATASETS[name]
+    A, b, lam_max = make_lasso_dataset(name, seed=0) \
+        if True else (None, None, None)
+    assert A.shape == (spec.m, spec.n)
+    density = np.mean(A != 0)
+    if spec.density < 1.0:
+        assert density == pytest.approx(spec.density, rel=0.5)
+    assert lam_max > 0
+    # no empty columns (Gram blocks stay PSD-nonzero)
+    assert np.all(np.abs(A).sum(axis=0) > 0)
+
+
+def test_svm_dataset_labels():
+    A, b = make_svm_dataset("w1a-like", seed=0)
+    assert set(np.unique(b)) <= {-1.0, 1.0}

@@ -1,0 +1,119 @@
+"""Kernel correctness sweeps: Pallas (interpret mode) vs jnp oracle over
+shapes and dtypes, per the repo kernel convention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import (attention_chunked,
+                                               flash_attention)
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.gram.ops import gram_and_proj, gram_t
+from repro.kernels.gram.ref import gram_and_proj_ref, gram_t_ref
+from repro.kernels.sa_inner.ops import sa_inner_loop
+from repro.kernels.sa_inner.ref import sa_inner_ref
+
+KEY = jax.random.key(0)
+
+
+@pytest.mark.parametrize("m,p,q", [(300, 65, 33), (1024, 128, 130),
+                                   (64, 8, 8), (513, 257, 3),
+                                   (129, 16, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_kernel_sweep(m, p, q, dtype):
+    x = jax.random.normal(KEY, (m, p), dtype)
+    y = jax.random.normal(jax.random.fold_in(KEY, 1), (m, q), dtype)
+    out = gram_t(x, y, interpret=True)
+    ref = gram_t_ref(x, y)
+    tol = 2e-3 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol * float(m) ** 0.5)
+
+
+def test_gram_and_proj_fused_matches_ref():
+    Y = jax.random.normal(KEY, (256, 48))
+    V = jax.random.normal(jax.random.fold_in(KEY, 2), (256, 2))
+    G1, P1 = gram_and_proj(Y, V, interpret=True)
+    G2, P2 = gram_and_proj_ref(Y, V)
+    np.testing.assert_allclose(np.asarray(G1), np.asarray(G2), rtol=1e-4,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(P1), np.asarray(P2), rtol=1e-4,
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("s,mu", [(4, 1), (8, 4), (16, 2), (3, 5)])
+def test_sa_inner_kernel_sweep(s, mu):
+    n = 64
+    G0 = jax.random.normal(KEY, (128, s * mu))
+    G = G0.T @ G0
+    yp = jax.random.normal(jax.random.fold_in(KEY, 3), (s, mu))
+    zp = jax.random.normal(jax.random.fold_in(KEY, 4), (s, mu))
+    zv = 0.1 * jax.random.normal(jax.random.fold_in(KEY, 5), (s, mu))
+    idx = jax.random.randint(jax.random.fold_in(KEY, 6), (s, mu), 0, n)
+    th = jnp.linspace(0.5, 0.1, s)
+    coefU = (1.0 - 16 * th) / (th * th)
+    dz1, e1 = sa_inner_loop(G, yp, zp, zv, idx, th, coefU, q=16.0,
+                            lam1=0.3, interpret=True)
+    dz2, e2 = sa_inner_ref(G, yp, zp, zv, idx, th, coefU, 16.0, 0.3)
+    np.testing.assert_allclose(np.asarray(dz1), np.asarray(dz2),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-4)
+
+
+ATTN_CASES = [
+    # B, Hq, Hkv, Sq, Sk, D, causal, window
+    (2, 4, 2, 128, 128, 64, True, 0),
+    (1, 8, 2, 256, 256, 64, True, 64),
+    (1, 4, 4, 100, 100, 32, True, 0),       # padding path
+    (1, 2, 1, 1, 384, 64, True, 0),         # decode
+    (1, 2, 1, 1, 384, 64, True, 128),       # decode + window
+    (2, 2, 2, 64, 64, 128, False, 0),       # bidirectional (encoder)
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kernel_sweep(case, dtype):
+    B, Hq, Hkv, Sq, Sk, D, causal, window = case
+    q = (jax.random.normal(KEY, (B, Hq, Sq, D)) * 0.3).astype(dtype)
+    k = (jax.random.normal(jax.random.fold_in(KEY, 7),
+                           (B, Hkv, Sk, D)) * 0.3).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 8),
+                          (B, Hkv, Sk, D)).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("Sq,Sk,window", [(256, 256, 0), (256, 256, 64),
+                                          (100, 228, 0), (512, 512, 100)])
+def test_attention_chunked_matches_ref(Sq, Sk, window):
+    B, Hq, Hkv, D = 2, 4, 2, 32
+    q = jax.random.normal(KEY, (B, Hq, Sq, D)) * 0.3
+    k = jax.random.normal(jax.random.fold_in(KEY, 9), (B, Hkv, Sk, D)) * 0.3
+    v = jax.random.normal(jax.random.fold_in(KEY, 10), (B, Hkv, Sk, D))
+    out = attention_chunked(q, k, v, causal=True, window=window,
+                            q_chunk=64)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3)
+
+
+def test_flash_attention_backward_matches_ref():
+    B, Hq, Hkv, S, D = 1, 2, 1, 64, 32
+    q = jax.random.normal(KEY, (B, Hq, S, D)) * 0.3
+    k = jax.random.normal(jax.random.fold_in(KEY, 11), (B, Hkv, S, D)) * 0.3
+    v = jax.random.normal(jax.random.fold_in(KEY, 12), (B, Hkv, S, D))
+
+    def f_kernel(q, k, v):
+        return flash_attention(q, k, v, causal=True, interpret=True).sum()
+
+    def f_ref(q, k, v):
+        return attention_ref(q, k, v, causal=True).sum()
+
+    g1 = jax.grad(f_kernel, (0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)

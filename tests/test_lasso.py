@@ -1,0 +1,71 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LassoProblem, SolverConfig, acc_bcd_lasso,
+                        bcd_lasso, solve_lasso)
+
+
+def _ista_reference(A, b, lam, iters=4000):
+    """Plain ISTA as an independent oracle for the lasso optimum."""
+    L = np.linalg.norm(A, 2) ** 2
+    x = np.zeros(A.shape[1], dtype=np.float64)
+    Af = A.astype(np.float64)
+    bf = b.astype(np.float64)
+    for _ in range(iters):
+        g = Af.T @ (Af @ x - bf)
+        v = x - g / L
+        x = np.sign(v) * np.maximum(np.abs(v) - lam / L, 0)
+    return x, 0.5 * np.sum((Af @ x - bf) ** 2) + lam * np.sum(np.abs(x))
+
+
+def test_bcd_converges_to_ista_optimum(lasso_data):
+    A, b, lam = lasso_data
+    x_star, f_star = _ista_reference(A, b, lam)
+    prob = LassoProblem(A=A, b=b, lam=lam)
+    res = acc_bcd_lasso(prob, SolverConfig(block_size=8, iterations=1500))
+    f_final = float(res.objective[-1])
+    assert f_final <= f_star * 1.02, (f_final, f_star)
+
+
+def test_objective_monotone_nonacc(lasso_data):
+    """Non-accelerated BCD is a descent method: objective never increases
+    (accelerated variants may oscillate — only tested for convergence)."""
+    A, b, lam = lasso_data
+    prob = LassoProblem(A=A, b=b, lam=lam)
+    res = bcd_lasso(prob, SolverConfig(block_size=4, iterations=200))
+    obj = np.asarray(res.objective)
+    assert np.all(np.diff(obj) <= 1e-3)
+
+
+def test_solution_is_sparse(lasso_data):
+    A, b, lam = lasso_data
+    prob = LassoProblem(A=A, b=b, lam=5 * lam)
+    res = acc_bcd_lasso(prob, SolverConfig(block_size=4, iterations=800))
+    x = np.asarray(res.x)
+    assert np.sum(np.abs(x) > 1e-6) < A.shape[1] * 0.5
+
+
+def test_residual_consistency(lasso_data):
+    """aux residual must equal A x - b for the returned x."""
+    A, b, lam = lasso_data
+    prob = LassoProblem(A=A, b=b, lam=lam)
+    res = acc_bcd_lasso(prob, SolverConfig(block_size=4, iterations=100))
+    np.testing.assert_allclose(np.asarray(res.aux["residual"]),
+                               A @ np.asarray(res.x) - b, atol=2e-3)
+
+
+def test_dispatch_solve_lasso(lasso_data):
+    A, b, lam = lasso_data
+    prob = LassoProblem(A=A, b=b, lam=lam)
+    for acc in (True, False):
+        for s in (1, 8):
+            cfg = SolverConfig(block_size=4, iterations=32, s=s,
+                               accelerated=acc)
+            res = solve_lasso(prob, cfg)
+            assert res.objective.shape == (32,)
+
+
+def test_iterations_must_divide_s():
+    with pytest.raises(ValueError):
+        SolverConfig(iterations=10, s=4)

@@ -1,0 +1,76 @@
+"""Hypothesis property tests on system-level invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.linalg import (power_iteration_max_eig, sample_block,
+                               theta_schedule)
+from repro.roofline.analysis import collective_bytes_from_hlo, \
+    two_point_fit
+
+
+@given(st.integers(2, 40), st.integers(1, 12))
+@settings(max_examples=30, deadline=None)
+def test_sample_block_valid(n, mu):
+    mu = min(mu, n)
+    idx = np.asarray(sample_block(jax.random.key(0), n, mu))
+    assert idx.shape == (mu,)
+    assert len(set(idx.tolist())) == mu          # without replacement
+    assert idx.min() >= 0 and idx.max() < n
+
+
+@given(st.integers(1, 64), st.integers(2, 256))
+@settings(max_examples=30, deadline=None)
+def test_theta_schedule_decreasing_in_unit_interval(num, q):
+    theta0 = jnp.float32(1.0 / q)
+    th = np.asarray(theta_schedule(theta0, num, q))
+    assert th.shape == (num + 1,)
+    assert np.all(th > 0) and np.all(th <= 1.0)
+    assert np.all(np.diff(th) <= 1e-7)           # monotone non-increasing
+
+
+@given(st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_power_iteration_matches_eigvalsh(seed):
+    rng = np.random.default_rng(seed)
+    mu = rng.integers(1, 9)
+    B = rng.standard_normal((20, mu)).astype(np.float32)
+    G = jnp.asarray(B.T @ B)
+    est = float(power_iteration_max_eig(G, iters=64))
+    true = float(np.linalg.eigvalsh(np.asarray(G)).max())
+    assert est <= true * 1.001
+    assert est >= true * 0.95                    # fixed-iter approx
+
+
+@given(st.floats(1, 1e6), st.floats(0, 1e6), st.integers(3, 100))
+@settings(max_examples=40, deadline=None)
+def test_two_point_fit_recovers_linear(fixed, per, n):
+    c1 = fixed + per
+    c2 = fixed + 2 * per
+    got = two_point_fit(c1, c2, 1, 2, n)
+    expected = fixed + n * per
+    assert abs(got - expected) <= 1e-6 * max(1.0, abs(expected))
+
+
+@given(st.integers(1, 64), st.integers(1, 64), st.sampled_from(
+    ["bf16", "f32", "s32"]), st.sampled_from(
+    ["all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+     "collective-permute"]))
+@settings(max_examples=40, deadline=None)
+def test_collective_parser_roundtrip(d0, d1, dt, op):
+    bytes_per = {"bf16": 2, "f32": 4, "s32": 4}[dt]
+    hlo = f"  %x.1 = {dt}[{d0},{d1}]{{1,0}} {op}(%p), channel_id=1"
+    out = collective_bytes_from_hlo(hlo)
+    assert out[op] == d0 * d1 * bytes_per
+
+
+@given(st.integers(0, 10_000), st.integers(1, 64), st.integers(1, 64))
+@settings(max_examples=25, deadline=None)
+def test_pipeline_shard_concat_invariant(step, gb_mult, seq):
+    from repro.data.tokens import TokenPipeline
+    gb = 4 * max(1, gb_mult % 4)
+    p = TokenPipeline(vocab_size=97, global_batch=gb, seq_len=seq, seed=7)
+    full, _ = p.batch_at(step)
+    parts = [p.shard_at(step, s, 4)[0] for s in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), full)

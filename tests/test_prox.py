@@ -1,0 +1,73 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.prox import (elastic_net_prox, group_soft_threshold,
+                             lasso_objective, make_prox, reg_value,
+                             soft_threshold)
+
+finite_floats = st.floats(-1e6, 1e6, allow_nan=False, width=32)
+
+
+@given(st.lists(finite_floats, min_size=1, max_size=32),
+       st.floats(0, 1e3, width=32))
+@settings(max_examples=60, deadline=None)
+def test_soft_threshold_properties(vals, alpha):
+    v = jnp.asarray(vals, jnp.float32)
+    out = np.asarray(soft_threshold(v, alpha))
+    # shrinks toward zero, never crosses it, shrinks by at most alpha
+    assert np.all(np.abs(out) <= np.abs(np.asarray(v)) + 1e-6)
+    assert np.all(out * np.asarray(v) >= -1e-6)
+    assert np.all(np.abs(np.asarray(v)) - np.abs(out)
+                  <= alpha + 1e-4 + 1e-5 * np.abs(np.asarray(v)))
+    # exact zero inside the threshold band
+    band = np.abs(np.asarray(v)) <= alpha
+    assert np.all(out[band] == 0.0)
+
+
+def test_soft_threshold_known_values():
+    v = jnp.asarray([3.0, -3.0, 0.5, -0.5, 0.0])
+    out = np.asarray(soft_threshold(v, 1.0))
+    np.testing.assert_allclose(out, [2.0, -2.0, 0.0, 0.0, 0.0])
+
+
+@given(finite_floats, st.floats(1e-3, 10.0), st.floats(0.0, 5.0),
+       st.floats(0.0, 5.0))
+@settings(max_examples=60, deadline=None)
+def test_elastic_net_prox_is_scaled_shrinkage(v, eta, l1, l2):
+    out = float(elastic_net_prox(jnp.float32(v), eta, l1, l2))
+    expected = float(soft_threshold(jnp.float32(v), eta * l1)) \
+        / (1.0 + 2.0 * eta * l2)
+    assert abs(out - expected) <= 1e-5 * max(1.0, abs(expected))
+
+
+def test_group_soft_threshold_zeroes_small_groups():
+    v = jnp.asarray([0.1, -0.1, 0.05])
+    assert np.all(np.asarray(group_soft_threshold(v, 10.0)) == 0)
+    v2 = jnp.asarray([3.0, 4.0])            # norm 5
+    out = np.asarray(group_soft_threshold(v2, 1.0))
+    np.testing.assert_allclose(out, np.asarray(v2) * (1 - 1.0 / 5.0),
+                               rtol=1e-6)
+
+
+def test_make_prox_dispatch():
+    p_l1 = make_prox(1.0)
+    p_en = make_prox(1.0, l2=0.5)
+    p_gl = make_prox(1.0, groups=np.array([0, 0, 1, 1]))
+    v = jnp.asarray([2.0, -2.0])
+    assert np.allclose(np.asarray(p_l1(v, 0.5)), [1.5, -1.5])
+    assert not np.allclose(np.asarray(p_en(v, 0.5)),
+                           np.asarray(p_l1(v, 0.5)))
+    out = p_gl(jnp.asarray([3.0, 4.0]), 1.0)
+    assert out.shape == (2,)
+
+
+def test_objective_matches_manual(lasso_data):
+    A, b, lam = lasso_data
+    x = np.zeros(A.shape[1], dtype=np.float32)
+    x[0] = 1.0
+    r = A @ x - b
+    manual = 0.5 * np.sum(r ** 2) + lam * np.sum(np.abs(x))
+    got = float(lasso_objective(jnp.asarray(r), jnp.asarray(x), lam))
+    assert abs(got - manual) / manual < 1e-5

@@ -1,0 +1,99 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import (HW_V5E, collective_bytes_from_hlo,
+                                     model_flops, roofline_terms,
+                                     two_point_fit)
+
+SAMPLE_HLO = """
+ENTRY %main {
+  %p0 = bf16[128,256]{1,0} parameter(0)
+  %ar = bf16[128,256]{1,0} all-reduce(%p0), replica_groups={}
+  %ag = f32[64,64]{1,0} all-gather(%p0), dimensions={0}
+  %rs = f32[8,8]{1,0} reduce-scatter(%ag), dimensions={0}
+  %a2a = f32[16]{0} all-to-all(%rs), dimensions={0}
+  %cp = s32[4,4]{1,0} collective-permute(%a2a), source_target_pairs={{0,1}}
+  %add = f32[64,64]{1,0} add(%ag, %ag)
+  ROOT %out = f32[64,64]{1,0} copy(%add)
+}
+"""
+
+
+def test_collective_parser_counts_each_type():
+    out = collective_bytes_from_hlo(SAMPLE_HLO)
+    assert out["all-reduce"] == 128 * 256 * 2
+    assert out["all-gather"] == 64 * 64 * 4
+    assert out["reduce-scatter"] == 8 * 8 * 4
+    assert out["all-to-all"] == 16 * 4
+    assert out["collective-permute"] == 4 * 4 * 4
+    assert out["total"] == sum(out[k] for k in (
+        "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+        "collective-permute"))
+
+
+def test_collective_parser_ignores_non_collectives():
+    out = collective_bytes_from_hlo("%x = f32[8]{0} add(%a, %b)")
+    assert out["total"] == 0
+
+
+def test_collective_parser_tuple_shapes():
+    hlo = "%t = (f32[8]{0}, f32[8]{0}) all-gather(%a, %b)"
+    out = collective_bytes_from_hlo(hlo)
+    assert out["all-gather"] == 2 * 8 * 4
+
+
+def test_two_point_fit_exact_linear():
+    # cost(n) = 10 + 3n
+    assert two_point_fit(13, 16, 1, 2, 32) == pytest.approx(10 + 3 * 32)
+
+
+def test_roofline_terms_classification():
+    t = roofline_terms(flops_per_dev=1e15, bytes_per_dev=1e9,
+                       coll_bytes_per_dev=1e9)
+    assert t["dominant"] == "compute"
+    t = roofline_terms(flops_per_dev=1e9, bytes_per_dev=1e13,
+                       coll_bytes_per_dev=1e9)
+    assert t["dominant"] == "memory"
+    t = roofline_terms(flops_per_dev=1e9, bytes_per_dev=1e9,
+                       coll_bytes_per_dev=1e13)
+    assert t["dominant"] == "collective"
+    assert 0 < t["roofline_fraction"] <= 1.0
+
+
+def test_model_flops_conventions():
+    assert model_flops(1e9, "train", tokens=1000) == 6e12
+    assert model_flops(1e9, "prefill", tokens=1000) == 2e12
+    assert model_flops(1e9, "decode", tokens=0, batch=64) == 2e9 * 64
+
+
+def test_xla_flops_convention_is_2mnk():
+    """Pin the XLA cost-model convention the roofline relies on:
+    cost_analysis reports 2*M*N*K FLOPs for a dot (per device)."""
+    a = jax.ShapeDtypeStruct((256, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 64), jnp.float32)
+    c = jax.jit(lambda x, y: x @ y).lower(a, b).compile()
+    flops = c.cost_analysis()["flops"]
+    assert flops == pytest.approx(2 * 256 * 128 * 64, rel=0.05)
+
+
+def test_xla_scan_body_counted_once():
+    """Pin the scan-counting behaviour that motivates the two-point fit."""
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c @ c), None
+        out, _ = jax.lax.scan(body, x, None, length=8)
+        return out
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    fl8 = jax.jit(f).lower(x).compile().cost_analysis()["flops"]
+
+    def f1(x):
+        def body(c, _):
+            return jnp.tanh(c @ c), None
+        out, _ = jax.lax.scan(body, x, None, length=1)
+        return out
+
+    fl1 = jax.jit(f1).lower(x).compile().cost_analysis()["flops"]
+    assert fl8 == pytest.approx(fl1, rel=0.01)

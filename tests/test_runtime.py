@@ -1,0 +1,56 @@
+"""Straggler monitor + failure injector unit tests (the end-to-end
+elastic path is covered in test_distributed.py)."""
+import pytest
+
+from repro.runtime.failures import FailureInjector
+from repro.runtime.stragglers import StragglerMonitor
+
+
+def test_injector_fires_once():
+    inj = FailureInjector(failures={5: [2]})
+    assert inj.check(4) == []
+    assert inj.check(5) == [2]
+    assert inj.check(5) == []          # popped: replay-safe
+    assert inj.fired == [(5, 2)]
+
+
+def test_straggler_detection_and_eviction():
+    mon = StragglerMonitor(n_hosts=4, threshold=1.5, patience=2,
+                           evict_after=4)
+    actions_seen = []
+    for step in range(8):
+        times = {0: 1.0, 1: 1.0, 2: 1.0, 3: 5.0}
+        actions = mon.record(times)
+        actions_seen.append(actions.get(3))
+    assert "rebalance" in actions_seen
+    assert "evict" in actions_seen
+    # healthy hosts never flagged
+    assert all(a is None or a in ("rebalance", "evict")
+               for a in actions_seen)
+
+
+def test_straggler_recovers():
+    mon = StragglerMonitor(n_hosts=2, threshold=1.5, patience=2)
+    for _ in range(3):
+        mon.record({0: 1.0, 1: 4.0})
+    for _ in range(6):
+        actions = mon.record({0: 1.0, 1: 1.0})
+    assert actions == {}
+
+
+def test_rebalance_weights_inverse_to_speed():
+    mon = StragglerMonitor(n_hosts=2)
+    for _ in range(5):
+        mon.record({0: 1.0, 1: 2.0})
+    w = mon.microbatch_weights()
+    assert w[0] > w[1]
+    assert sum(w) == pytest.approx(2.0)
+
+
+def test_drop_host():
+    mon = StragglerMonitor(n_hosts=3)
+    mon.record({0: 1.0, 1: 1.0, 2: 9.0})
+    mon.drop_host(2)
+    actions = mon.record({0: 1.0, 1: 1.0})
+    assert actions == {}
+    assert len(mon.microbatch_weights()) == 2

@@ -1,0 +1,48 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SVMProblem, SolverConfig, dcd_svm, dual_objective,
+                        duality_gap, primal_objective, sa_svm)
+
+
+def test_incremental_dual_tracking_exact(svm_data):
+    """The per-iteration dual objective (tracked with local scalars only)
+    must equal the direct quadratic-form evaluation."""
+    A, b = svm_data
+    for loss in ("l1", "l2"):
+        prob = SVMProblem(A=A, b=b, lam=1.0, loss=loss)
+        res = dcd_svm(prob, SolverConfig(iterations=96))
+        tracked = float(res.objective[-1])
+        direct = float(dual_objective(prob, res.aux["alpha"]))
+        assert abs(tracked - direct) < 1e-3 * max(1.0, abs(direct))
+
+
+def test_duality_gap_decreases(svm_data):
+    A, b = svm_data
+    prob = SVMProblem(A=A, b=b, lam=1.0, loss="l2")
+    gaps = []
+    for H in (16, 64, 256):
+        res = dcd_svm(prob, SolverConfig(iterations=H))
+        gaps.append(float(duality_gap(prob, res.x, res.aux["alpha"])))
+    assert gaps[-1] < gaps[0]
+    assert all(g > -1e-3 for g in gaps)      # weak duality
+
+
+def test_alpha_box_constraints(svm_data):
+    A, b = svm_data
+    prob = SVMProblem(A=A, b=b, lam=1.0, loss="l1")
+    res = dcd_svm(prob, SolverConfig(iterations=128))
+    alpha = np.asarray(res.aux["alpha"])
+    assert np.all(alpha >= -1e-6)
+    assert np.all(alpha <= prob.lam + 1e-6)   # nu = lam for L1
+
+
+def test_x_is_dual_combination(svm_data):
+    """x must equal  A^T (b * alpha)  at all times (Alg. 3 line 2/14)."""
+    A, b = svm_data
+    prob = SVMProblem(A=A, b=b, lam=1.0, loss="l2")
+    res = sa_svm(prob, SolverConfig(iterations=64, s=8))
+    alpha = np.asarray(res.aux["alpha"])
+    np.testing.assert_allclose(np.asarray(res.x),
+                               A.T @ (b * alpha), atol=1e-3)
