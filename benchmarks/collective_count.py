@@ -24,10 +24,8 @@ from repro.core.distributed import lower_lasso_step, lower_svm_step
 from repro.core.types import SolverConfig
 from repro.roofline.analysis import collective_bytes_from_hlo
 
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
-mesh_m = jax.make_mesh((8,), ("model",),
-                       axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((8,), ("data",))
+mesh_m = jax.make_mesh((8,), ("model",))
 H = 64
 for s in (1, 4, 16):
     cfg = SolverConfig(block_size=4, iterations=H, s=s,

@@ -1,12 +1,13 @@
-"""Paper SVM artifacts: Fig. 5 (duality gap, SA == non-SA) and Table V
-(speedups at best s from the machine model)."""
+"""Paper SVM artifacts: Fig. 5 (duality gap, SA == non-SA), Table V
+(speedups at best s from the machine model), and the blocked-SVM
+(s, mu) sweep for BDCD / SA-BDCD."""
 import dataclasses
 
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.core import (SVMProblem, SolverConfig, dcd_svm, duality_gap,
-                        sa_svm)
+from repro.core import (SVMProblem, SolverConfig, bdcd_svm, dcd_svm,
+                        duality_gap, sa_bdcd_svm, sa_svm)
 from repro.core.cost_model import (Machine, PAPER_DATASETS, best_s,
                                    svm_speedup)
 from repro.data.sparse import make_svm_dataset
@@ -53,9 +54,50 @@ def table5_speedups():
              f"model_speedup_s64={sp64:.2f};paper_measured={measured}")
 
 
+def blocked_smu_sweep():
+    """Blocked-SVM sweep over (s, mu): per-iteration wall time, SA == BDCD
+    trajectory deviation, and final duality gap for both hinge losses.
+    The SA-BDCD rows amortize ONE Allreduce over s block updates."""
+    A, b = make_svm_dataset("w1a-like", seed=0)
+    for loss in ("l1", "l2"):
+        prob = SVMProblem(A=A, b=b, lam=1.0, loss=loss)
+        for mu in (1, 2, 4, 8):
+            cfg = SolverConfig(block_size=mu, iterations=H)
+            us, res = timeit(lambda: bdcd_svm(prob, cfg), repeats=1)
+            o1 = np.asarray(res.objective)
+            gap = float(duality_gap(prob, res.x, res.aux["alpha"]))
+            emit(f"blocked/w1a-like/svm-{loss}/mu{mu}/s1", us / H,
+                 f"dual={o1[-1]:.5f};gap={gap:.4g}")
+            for s in (4, 16, 64):
+                us_sa, res_sa = timeit(
+                    lambda: sa_bdcd_svm(prob, dataclasses.replace(cfg, s=s)),
+                    repeats=1)
+                o2 = np.asarray(res_sa.objective)
+                dev = float(np.max(np.abs(o1 - o2)
+                                   / np.maximum(np.abs(o1), 1e-9)))
+                emit(f"blocked/w1a-like/svm-{loss}/mu{mu}/s{s}", us_sa / H,
+                     f"dual={o2[-1]:.5f};sa_traj_dev={dev:.2e}")
+
+
+def blocked_model_speedups():
+    """Machine-model speedups for SA-BDCD over the (s, mu) grid (Table V
+    analogue for the blocked variant)."""
+    machine = Machine.cray_xc30()
+    for ds, P in (("rcv1.binary", 240), ("news20.binary", 576),
+                  ("gisette", 3072)):
+        dims = PAPER_DATASETS[ds]
+        for mu in (1, 2, 4, 8):
+            s_star, sp = best_s(dims, H=200_000, mu=mu, P=P,
+                                machine=machine, kind="svm")
+            emit(f"blocked_model/{ds}/P{P}/mu{mu}", 0.0,
+                 f"model_best_s={s_star};model_speedup={sp:.2f}")
+
+
 def main():
     fig5_duality_gap()
     table5_speedups()
+    blocked_smu_sweep()
+    blocked_model_speedups()
 
 
 if __name__ == "__main__":

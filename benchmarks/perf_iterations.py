@@ -21,11 +21,9 @@ import json, sys
 flags = json.loads(sys.argv[1])
 import repro.models.layers as L
 import repro.kernels.flash_attention.ops as fops
-import repro.core.sa_lasso as sal
 L.DECODE_GROUPED_GQA = flags.get("grouped_gqa", False)
 L.MOE_BUF_2D = flags.get("moe_buf_2d", False)
 fops.CHUNKED_BF16_PROBS = flags.get("bf16_probs", False)
-sal.SYMMETRIC_GRAM = flags.get("sym_gram", False)
 if "moe_chunk" in flags:
     L.MOE_CHUNK_TOKENS = flags["moe_chunk"]
 if "q_chunk" in flags:
@@ -54,23 +52,23 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import json, sys, re, jax
 flags = json.loads(sys.argv[1])
-import repro.core.sa_lasso as sal
-sal.SYMMETRIC_GRAM = flags.get("sym_gram", False)
 from repro.core.distributed import lower_lasso_step
 from repro.core.types import SolverConfig
 from repro.launch.mesh import make_production_mesh
-from repro.roofline.analysis import collective_bytes_from_hlo
+from repro.roofline.analysis import collective_bytes_from_hlo, \
+    cost_analysis_dict
 mesh = make_production_mesh(multi_pod=flags.get("multi_pod", True))
 axes = ("pod", "data") if flags.get("multi_pod", True) else "data"
 H, s, mu = 64, flags.get("s", 16), flags.get("mu", 8)
 cfg = SolverConfig(block_size=mu, iterations=H, s=s,
-                   track_objective=False)
+                   track_objective=False,
+                   symmetric_gram=flags.get("sym_gram", False))
 lowered = lower_lasso_step(cfg, mesh, m=131072, n=8192, axes=axes)
 c = lowered.compile()
 txt = c.as_text()
 coll = collective_bytes_from_hlo(txt)
 static = len(re.findall(r"= \S+ all-reduce\(", txt))
-ca = c.cost_analysis()
+ca = cost_analysis_dict(c)
 out = {"s": s, "static_allreduce": static, "trips": H // s,
        "runtime_msgs": static * (H // s),
        "coll_bytes_per_outer": coll["total"],

@@ -23,6 +23,8 @@ def _register():
         "fig4": paper_lasso.fig4_scaling,
         "fig5": paper_svm.fig5_duality_gap,
         "table5": paper_svm.table5_speedups,
+        "blocked_svm": paper_svm.blocked_smu_sweep,
+        "blocked_svm_model": paper_svm.blocked_model_speedups,
         "collectives": collective_count.main,
         "roofline": roofline_bench.main,
     })

@@ -11,15 +11,16 @@ from repro.core.lasso import (acc_bcd_lasso, acc_cd_lasso, bcd_lasso,
                               cd_lasso, solve_lasso)
 from repro.core.sa_lasso import (sa_acc_bcd_lasso, sa_acc_cd_lasso,
                                  sa_bcd_lasso, sa_cd_lasso)
-from repro.core.svm import dcd_svm, duality_gap, dual_objective, \
-    primal_objective, solve_svm
-from repro.core.sa_svm import sa_svm
+from repro.core.svm import bdcd_svm, dcd_svm, duality_gap, \
+    dual_objective, primal_objective, solve_svm
+from repro.core.sa_svm import sa_bdcd_svm, sa_svm
 from repro.core.distributed import solve_lasso_sharded, solve_svm_sharded
 
 __all__ = [
     "LassoProblem", "SVMProblem", "SolverConfig", "SolverResult",
     "acc_bcd_lasso", "acc_cd_lasso", "bcd_lasso", "cd_lasso", "solve_lasso",
     "sa_acc_bcd_lasso", "sa_acc_cd_lasso", "sa_bcd_lasso", "sa_cd_lasso",
-    "dcd_svm", "sa_svm", "solve_svm", "duality_gap", "dual_objective",
-    "primal_objective", "solve_lasso_sharded", "solve_svm_sharded",
+    "bdcd_svm", "dcd_svm", "sa_bdcd_svm", "sa_svm", "solve_svm",
+    "duality_gap", "dual_objective", "primal_objective",
+    "solve_lasso_sharded", "solve_svm_sharded",
 ]

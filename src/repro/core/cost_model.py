@@ -72,13 +72,23 @@ def lasso_costs(dims: ProblemDims, H: int, mu: int, s: int, P: int
     return {"F": F, "L": L, "W": W, "M": M, "I": float(H)}
 
 
-def svm_costs(dims: ProblemDims, H: int, s: int, P: int) -> Dict[str, float]:
-    """SVM analogue (mu = 1 coordinate per iteration; Gram is s x s)."""
+def svm_costs(dims: ProblemDims, H: int, s: int, P: int,
+              mu: int = 1) -> Dict[str, float]:
+    """(SA-)BDCD SVM analogue of Table I: mu dual coordinates per
+    iteration, Gram is (s*mu) x (s*mu). mu = 1, s = 1 is classical DCD.
+
+    Per inner iteration: the Gram/projection GEMM costs mu^2 s f n / P
+    flops (amortized over the outer group), the redundant inner updates
+    cost s mu^2 (cross terms), the mu x mu subproblem mu^3 (power
+    iteration). The Allreduce moves s mu^2 words every s iterations ->
+    W = H s mu^2 log P at L = (H/s) log P messages."""
     logP = max(math.log2(max(P, 2)), 1.0)
-    F = H * s * dims.f * dims.n / P + H * s
+    F = H * mu * mu * s * dims.f * dims.n / P + H * s * mu * mu \
+        + H * mu ** 3
     L = (H / s) * logP
-    W = H * s * logP
-    M = (dims.f * dims.m * dims.n) / P + dims.m + s * s + dims.n / P
+    W = H * s * mu * mu * logP
+    M = (dims.f * dims.m * dims.n) / P + dims.m + s * s * mu * mu \
+        + dims.n / P
     return {"F": F, "L": L, "W": W, "M": M, "I": float(H)}
 
 
@@ -96,9 +106,9 @@ def lasso_speedup(dims: ProblemDims, H: int, mu: int, s: int, P: int,
 
 
 def svm_speedup(dims: ProblemDims, H: int, s: int, P: int,
-                machine: Machine) -> float:
-    t1 = predicted_time(svm_costs(dims, H, 1, P), machine)
-    ts = predicted_time(svm_costs(dims, H, s, P), machine)
+                machine: Machine, mu: int = 1) -> float:
+    t1 = predicted_time(svm_costs(dims, H, 1, P, mu), machine)
+    ts = predicted_time(svm_costs(dims, H, s, P, mu), machine)
     return t1 / ts
 
 
@@ -112,7 +122,8 @@ def best_s(dims: ProblemDims, H: int, mu: int, P: int, machine: Machine,
     over) reproduces the qualitative shape of paper Fig. 4e-h.
     """
     fn = (lambda s: lasso_speedup(dims, H, mu, s, P, machine)) \
-        if kind == "lasso" else (lambda s: svm_speedup(dims, H, s, P, machine))
+        if kind == "lasso" \
+        else (lambda s: svm_speedup(dims, H, s, P, machine, mu))
     best = max(candidates, key=fn)
     return best, fn(best)
 

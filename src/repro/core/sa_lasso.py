@@ -25,25 +25,31 @@ import jax.numpy as jnp
 from repro.core import linalg
 from repro.core.lasso import _objective, _prep
 from repro.core.types import LassoProblem, SolverConfig, SolverResult
+from repro.kernels.gram import gram_t
 
 
-# Perf-iteration flag (EXPERIMENTS.md §Perf): the paper notes (footnote 3)
-# that G is symmetric, so communicating only the lower triangle halves the
-# message size. Baseline (paper-faithful main path) reduces the full
-# matrix; SYMMETRIC_GRAM packs tril(G) before the Allreduce and
-# reconstitutes afterwards — ~2x less W at O(s^2 mu^2) local reshuffling.
-SYMMETRIC_GRAM = False
-
-
-def _gram_and_proj(Y, vecs, axis_name):
+def _gram_and_proj(Y, vecs, axis_name, symmetric: bool = False,
+                   use_pallas: bool = False):
     """ONE fused Allreduce:  Y^T @ [Y | vecs]  (paper Alg. 2 lines 11-12).
 
     Y: (m_loc, s*mu) sampled columns; vecs: (m_loc, k) residual-like vectors.
     Returns (G, P) with G (s*mu, s*mu) and P (s*mu, k), replicated.
+
+    symmetric (``SolverConfig.symmetric_gram``, paper footnote 3): G is
+    symmetric, so communicating only its lower triangle halves the message
+    size — ~2x less W at O(s^2 mu^2) local pack/unpack reshuffling. The
+    reduced values are identical, only their layout changes.
+
+    use_pallas routes the local GEMM through the ``repro.kernels.gram``
+    Pallas kernel (f32 MXU accumulation); the plain-jnp path otherwise.
     """
     smu = Y.shape[1]
-    local = Y.T @ jnp.concatenate([Y, vecs], axis=1)
-    if SYMMETRIC_GRAM:
+    rhs = jnp.concatenate([Y, vecs], axis=1)
+    if use_pallas:
+        local = gram_t(Y, rhs, use_pallas=True).astype(Y.dtype)
+    else:
+        local = Y.T @ rhs
+    if symmetric:
         il, jl = jnp.tril_indices(smu)
         packed = jnp.concatenate(
             [local[:, :smu][il, jl], local[:, smu:].reshape(-1)])
@@ -85,7 +91,9 @@ def sa_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
         idxs = _sample_all(key, sampler, k, s)            # (s, mu)
         Y = A[:, idxs.reshape(s * mu)]                    # (m_loc, s*mu) local
         # --- Communication: ONE fused Allreduce ---
-        G, P = _gram_and_proj(Y, r[:, None], axis_name)
+        G, P = _gram_and_proj(Y, r[:, None], axis_name,
+                              symmetric=cfg.symmetric_gram,
+                              use_pallas=cfg.use_pallas)
         G4 = G.reshape(s, mu, s, mu)
         r_proj = P[:, 0].reshape(s, mu)
 
@@ -153,7 +161,9 @@ def sa_acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
         idxs = _sample_all(key, sampler, k, s)            # (s, mu)
         Y = A[:, idxs.reshape(s * mu)]                    # (m_loc, s*mu) local
         # --- Communication: ONE fused Allreduce (Alg. 2 lines 11-12) ---
-        G, P = _gram_and_proj(Y, jnp.stack([ytil, ztil], axis=1), axis_name)
+        G, P = _gram_and_proj(Y, jnp.stack([ytil, ztil], axis=1), axis_name,
+                              symmetric=cfg.symmetric_gram,
+                              use_pallas=cfg.use_pallas)
         G4 = G.reshape(s, mu, s, mu)
         y_proj = P[:, 0].reshape(s, mu)                   # A_j^T ytil_sk
         z_proj = P[:, 1].reshape(s, mu)                   # A_j^T ztil_sk

@@ -1,15 +1,22 @@
-"""Synchronization-Avoiding linear SVM — paper Algorithm 4.
+"""Synchronization-Avoiding linear SVM — paper Algorithm 4 and its block
+generalization SA-BDCD (after Devarakonda et al., arXiv:1612.04003).
 
-Unrolls s iterations of dual CD: sample s row indices up front, compute the
-s x s Gram matrix  G = Y Y^T + gamma I  and the projections  x' = Y x_sk
-with ONE fused Allreduce (Alg. 4 lines 9-10), then run the s inner updates
-on replicated scalars. The diagonal of G supplies every eta_{sk+j}
-(Alg. 4 line 11) — the classical per-iteration ||A_i||^2 reductions vanish
-entirely. Deferred primal update: x += Y^T (theta * b_sel), a local GEMV.
+Unrolls s iterations of (block) dual CD: sample s blocks of mu row
+indices up front, compute the (s*mu) x (s*mu) Gram matrix
+G = Y Y^T + gamma I  and the projections  x' = Y x_sk  with ONE fused
+Allreduce (Alg. 4 lines 9-10; the local GEMM can route through the
+``repro.kernels.gram`` Pallas kernel), then run the s inner block-updates
+redundantly on replicated O(s^2 mu^2)-sized data. The diagonal blocks of
+G supply every step size (Alg. 4 line 11: eta for mu = 1; lambda_max via
+power iteration for mu > 1) — the classical per-iteration Gram-block
+reductions vanish entirely. Deferred primal update:
+x += Y^T (b * theta), ONE local GEMV per outer iteration.
 
-Same-index collisions across inner iterations (paper Eq. 14's
-I_{sk+j}^T I_{sk+t} term) are handled by gathering beta_j from the
-*updated* replicated alpha — algebraically identical, see DESIGN.md.
+Same-index collisions across the s blocks of an outer group (paper
+Eq. 14's I_{sk+j}^T I_{sk+t} term) are handled by gathering beta_j from
+the *updated* replicated alpha, and by the Gram cross terms, whose
+off-diagonal blocks hold the raw Y_j Y_t^T even when indices repeat —
+algebraically identical to the classical method, see DESIGN.md.
 """
 from __future__ import annotations
 
@@ -19,15 +26,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import linalg
+from repro.core.sa_lasso import _gram_and_proj
 from repro.core.types import SVMProblem, SolverConfig, SolverResult
 
 
-def sa_svm(problem: SVMProblem, cfg: SolverConfig,
-           axis_name: Optional[object] = None,
-           alpha0=None) -> SolverResult:
+def sa_bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
+                axis_name: Optional[object] = None,
+                alpha0=None) -> SolverResult:
+    """s-step unrolled BDCD: identical iterates to ``bdcd_svm`` in exact
+    arithmetic, ONE Allreduce per s inner iterations."""
     A = jnp.asarray(problem.A, cfg.dtype)
     b = jnp.asarray(problem.b, cfg.dtype)
     m = A.shape[0]
+    mu = cfg.block_size
     gamma = jnp.asarray(problem.gamma, cfg.dtype)
     nu = jnp.asarray(problem.nu, cfg.dtype)
     key = jax.random.key(cfg.seed)
@@ -40,47 +51,55 @@ def sa_svm(problem: SVMProblem, cfg: SolverConfig,
 
     def outer(carry, k):
         alpha, x, dual = carry
-        # sample s indices with the same fold_in ids as the non-SA solver.
+        # sample the s blocks with the same fold_in ids as the non-SA
+        # solver (global iteration ids h = k*s + j) -> bit-identical draws.
         hs = k * s + 1 + jnp.arange(s)
-        idx = jax.vmap(
-            lambda h: jax.random.randint(jax.random.fold_in(key, h),
-                                         (), 0, m))(hs)   # (s,)
-        Y = A[idx]                                        # (s, n_loc) local
-        b_sel = b[idx]                                    # (s,) replicated
+        idxs = jax.vmap(
+            lambda h: linalg.sample_block(jax.random.fold_in(key, h),
+                                          m, mu))(hs)     # (s, mu)
+        Y = A[idxs.reshape(s * mu)]                       # (s*mu, n_loc)
+        b_sel = b[idxs.reshape(s * mu)].reshape(s, mu)    # replicated
         # --- Communication: ONE fused Allreduce of  Y [Y^T | x] ---
-        red = linalg.preduce(
-            Y @ jnp.concatenate([Y.T, x[:, None]], axis=1), axis_name)
-        G = red[:, :s] + gamma * jnp.eye(s, dtype=cfg.dtype)  # line 9
-        x_proj = red[:, s]                                # line 10: Y x_sk
-        etas = jnp.diagonal(G)                            # line 11
+        Graw, P = _gram_and_proj(Y.T, x[:, None], axis_name,
+                                 symmetric=cfg.symmetric_gram,
+                                 use_pallas=cfg.use_pallas)
+        G = Graw + gamma * jnp.eye(s * mu, dtype=cfg.dtype)   # line 9
+        G4 = G.reshape(s, mu, s, mu)
+        x_proj = P[:, 0].reshape(s, mu)                   # line 10: Y x_sk
 
         def inner(inner_carry, j):
-            alpha, theta_buf, dual = inner_carry
-            i_j = idx[j]
-            beta = alpha[i_j]                             # Eq. (14), exact
-            # Eq. (15): cross terms sum_{t<j} theta_t b_j b_t (Y Y^T)[j, t].
-            # The +gamma*I in G only touches [j, j], which the t<j mask
-            # excludes, so G's off-diagonals are the raw Y Y^T the equation
-            # needs — even when i_t == i_j.
+            alpha, bt_buf, dual = inner_carry
+            idx_j = idxs[j]
+            b_j = b_sel[j]
+            beta = alpha[idx_j]                           # Eq. (14), exact
+            Gj = G4[j]                                    # (mu, s, mu)
+            # Eq. (15): cross terms  Y_j Y_t^T (b_t theta_t)  for t < j.
+            # The +gamma*I in G only touches the diagonal block t == j,
+            # which the t<j mask excludes, so G's off-diagonal blocks are
+            # the raw Y Y^T the equation needs — even when indices repeat
+            # across blocks.
+            cross = jnp.einsum("ptq,tq->tp", Gj, bt_buf)  # (s, mu)
             mask = (jnp.arange(s) < j).astype(cfg.dtype)
-            cross = b_sel[j] * jnp.sum(mask * theta_buf * b_sel * G[j])
-            g = b_sel[j] * x_proj[j] - 1.0 + gamma * beta + cross
-            eta = etas[j]
+            rj = x_proj[j] + jnp.einsum("t,tp->p", mask, cross)
+            g = b_j * rj - 1.0 + gamma * beta
+            Gjj = Gj[:, j, :]                             # (mu, mu) diag blk
+            v = linalg.power_iteration_max_eig(Gjj, cfg.power_iters)
             gbar = jnp.abs(jnp.clip(beta - g, 0.0, nu) - beta)   # line 15
             theta = jnp.where(
                 gbar != 0.0,
-                jnp.clip(beta - g / eta, 0.0, nu) - beta,        # line 16
+                jnp.clip(beta - g / v, 0.0, nu) - beta,          # line 16
                 0.0)
-            alpha = alpha.at[i_j].add(theta)              # line 20
-            theta_buf = theta_buf.at[j].set(theta)
-            dual = dual + theta * g + 0.5 * theta * theta * eta
-            return (alpha, theta_buf, dual), dual
+            alpha = alpha.at[idx_j].add(theta)            # line 20
+            bt = b_j * theta
+            bt_buf = bt_buf.at[j].set(bt)
+            dual = dual + jnp.sum(theta * g) + 0.5 * bt @ (Gjj @ bt)
+            return (alpha, bt_buf, dual), dual
 
-        theta_buf0 = jnp.zeros((s,), cfg.dtype)
-        (alpha, theta_buf, dual), duals = jax.lax.scan(
-            inner, (alpha, theta_buf0, dual), jnp.arange(s))
+        bt_buf0 = jnp.zeros((s, mu), cfg.dtype)
+        (alpha, bt_buf, dual), duals = jax.lax.scan(
+            inner, (alpha, bt_buf0, dual), jnp.arange(s))
         # Deferred primal update (local GEMV): x += Y^T (theta * b_sel).
-        x = x + Y.T @ (theta_buf * b_sel)                 # line 21, batched
+        x = x + Y.T @ bt_buf.reshape(s * mu)              # line 21, batched
         objs = duals if cfg.track_objective \
             else jnp.zeros((s,), cfg.dtype)
         return (alpha, x, dual), objs
@@ -90,3 +109,12 @@ def sa_svm(problem: SVMProblem, cfg: SolverConfig,
         outer, (alpha, x, dual0), jnp.arange(K))
     return SolverResult(x=x, objective=objs.reshape(H),
                         aux={"alpha": alpha, "dual": dual})
+
+
+def sa_svm(problem: SVMProblem, cfg: SolverConfig,
+           axis_name: Optional[object] = None,
+           alpha0=None) -> SolverResult:
+    """Paper Algorithm 4: the block_size = 1 special case of
+    ``sa_bdcd_svm``."""
+    assert cfg.block_size == 1
+    return sa_bdcd_svm(problem, cfg, axis_name, alpha0)

@@ -16,11 +16,20 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh helper (tests, examples)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` for the enclosed traces.
+
+    ``jax.set_mesh`` where available; on older jax the Mesh object itself
+    is the context manager.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

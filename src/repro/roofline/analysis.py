@@ -103,6 +103,15 @@ def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
     return out
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` normalized across jax versions:
+    older jax returns a one-element list of dicts, newer jax the dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def two_point_fit(cost1: float, cost2: float, n1: int, n2: int,
                   n_target: int) -> float:
     """cost(n) = fixed + n * per_unit, fit on (n1, cost1), (n2, cost2)."""

@@ -28,6 +28,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
+from repro.launch.mesh import set_mesh
 from repro.configs.base import ArchConfig
 from repro.data.tokens import TokenPipeline
 from repro.models import lm
@@ -56,8 +57,7 @@ def build_mesh(devices: List, model_axis: int) -> Mesh:
     n = len(devices)
     assert n % model_axis == 0, (n, model_axis)
     devs = np.array(devices).reshape(n // model_axis, model_axis)
-    return Mesh(devs, ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return Mesh(devs, ("data", "model"))
 
 
 def make_train_step(arch: ArchConfig, optimizer: AdamW, mesh: Mesh,
@@ -155,7 +155,7 @@ class Trainer:
                                             self.mesh)
         self.sspecs = self.optimizer.state_specs(self.pspecs)
         if fresh:
-            with jax.set_mesh(self.mesh):
+            with set_mesh(self.mesh):
                 params = lm.init_params(self.arch,
                                         jax.random.key(self.cfg.seed))
                 params = jax.device_put(params, self._ns(self.pspecs))

@@ -30,8 +30,7 @@ def test_specs_roundtrip_and_mesh_placement(tmp_path):
     tree = _tree()
     specs = {"a": P(None, None), "nested": {"b": P(None), "c": P()}}
     save_checkpoint(str(tmp_path), 1, tree, specs=specs)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((1,), ("data",))
     restored, _ = restore_checkpoint(str(tmp_path), tree_like=tree,
                                      mesh=mesh)
     np.testing.assert_array_equal(np.asarray(restored["a"]),

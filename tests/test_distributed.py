@@ -31,10 +31,8 @@ def test_solvers_match_single_device():
 from repro.core import (LassoProblem, SVMProblem, SolverConfig,
                         solve_lasso, solve_svm, solve_lasso_sharded,
                         solve_svm_sharded)
-mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
-mesh_m = jax.make_mesh((8,), ("model",),
-                       axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((2, 4), ("pod", "data"))
+mesh_m = jax.make_mesh((8,), ("model",))
 rng = np.random.default_rng(1)
 m, n = 203, 60
 A = rng.standard_normal((m, n)).astype(np.float32)
@@ -66,8 +64,7 @@ def test_sa_collective_count_reduction():
     out = _run(HEADER + """
 from repro.core.distributed import lower_lasso_step
 from repro.core.types import SolverConfig
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((8,), ("data",))
 import re
 def count_allreduce(cfg):
     lowered = lower_lasso_step(cfg, mesh, m=256, n=64)
@@ -92,6 +89,7 @@ print("COLL_OK", n1 * trips1, n8 * trips8)
     assert "COLL_OK" in out
 
 
+@pytest.mark.slow
 def test_trainer_elastic_restart():
     """Fault tolerance end-to-end: inject a host failure mid-run; the
     driver re-meshes to fewer devices, restores the checkpoint, and the
@@ -134,6 +132,7 @@ print("ELASTIC_OK", lb, lf, res["events"])
     assert "ELASTIC_OK" in out
 
 
+@pytest.mark.slow
 def test_trainer_microbatch_equivalence():
     """Deferred-allreduce grad accumulation == single big batch (the
     SA-exactness analogue at the trainer level)."""

@@ -1,6 +1,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.prox import (elastic_net_prox, group_soft_threshold,

@@ -4,8 +4,8 @@ import numpy as np
 import pytest
 
 from repro.roofline.analysis import (HW_V5E, collective_bytes_from_hlo,
-                                     model_flops, roofline_terms,
-                                     two_point_fit)
+                                     cost_analysis_dict, model_flops,
+                                     roofline_terms, two_point_fit)
 
 SAMPLE_HLO = """
 ENTRY %main {
@@ -74,7 +74,7 @@ def test_xla_flops_convention_is_2mnk():
     a = jax.ShapeDtypeStruct((256, 128), jnp.float32)
     b = jax.ShapeDtypeStruct((128, 64), jnp.float32)
     c = jax.jit(lambda x, y: x @ y).lower(a, b).compile()
-    flops = c.cost_analysis()["flops"]
+    flops = cost_analysis_dict(c)["flops"]
     assert flops == pytest.approx(2 * 256 * 128 * 64, rel=0.05)
 
 
@@ -87,7 +87,7 @@ def test_xla_scan_body_counted_once():
         return out
 
     x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
-    fl8 = jax.jit(f).lower(x).compile().cost_analysis()["flops"]
+    fl8 = cost_analysis_dict(jax.jit(f).lower(x).compile())["flops"]
 
     def f1(x):
         def body(c, _):
@@ -95,5 +95,5 @@ def test_xla_scan_body_counted_once():
         out, _ = jax.lax.scan(body, x, None, length=1)
         return out
 
-    fl1 = jax.jit(f1).lower(x).compile().cost_analysis()["flops"]
+    fl1 = cost_analysis_dict(jax.jit(f1).lower(x).compile())["flops"]
     assert fl8 == pytest.approx(fl1, rel=0.01)

@@ -12,7 +12,8 @@ import numpy as np
 import pytest
 
 from repro.core import (LassoProblem, SVMProblem, SolverConfig,
-                        bcd_lasso, acc_bcd_lasso, dcd_svm, sa_svm,
+                        bcd_lasso, acc_bcd_lasso, bdcd_svm, dcd_svm,
+                        duality_gap, sa_bdcd_svm, sa_svm,
                         sa_bcd_lasso, sa_acc_bcd_lasso)
 
 
@@ -52,6 +53,154 @@ def test_svm_sa_trajectory_matches(svm_data, loss, s):
     assert o1[-1] < o1[0]          # dual objective decreases
 
 
+_BDCD_BASE_CACHE = {}
+
+
+def _bdcd_base(svm_data, loss, mu, H):
+    """bdcd_svm depends only on (loss, mu, H) — cache across the s sweep."""
+    key = (loss, mu, H)
+    if key not in _BDCD_BASE_CACHE:
+        A, b = svm_data
+        prob = SVMProblem(A=A, b=b, lam=1.0, loss=loss)
+        _BDCD_BASE_CACHE[key] = bdcd_svm(
+            prob, SolverConfig(block_size=mu, iterations=H))
+    return _BDCD_BASE_CACHE[key]
+
+
+@pytest.mark.parametrize("loss", ["l1", "l2"])
+@pytest.mark.parametrize("mu", [1, 2, 4])
+@pytest.mark.parametrize("s", [1, 2, 4, 8])
+def test_svm_blocked_sa_trajectory_matches(svm_data, loss, mu, s):
+    """SA-BDCD == BDCD iterates across the full (s, mu, loss) sweep."""
+    A, b = svm_data
+    prob = SVMProblem(A=A, b=b, lam=1.0, loss=loss)
+    H = 32
+    base = _bdcd_base(svm_data, loss, mu, H)
+    sa = sa_bdcd_svm(prob, SolverConfig(block_size=mu, iterations=H, s=s))
+    o1, o2 = np.asarray(base.objective), np.asarray(sa.objective)
+    assert o1.shape == o2.shape == (H,)
+    np.testing.assert_allclose(o2, o1, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sa.x), np.asarray(base.x),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sa.aux["alpha"]),
+                               np.asarray(base.aux["alpha"]), atol=1e-4)
+    assert o1[-1] < o1[0]          # dual objective decreases
+
+
+@pytest.mark.parametrize("loss", ["l1", "l2"])
+def test_svm_blocked_sa_collisions_within_group(loss):
+    """Tiny m forces the same row index to repeat across the s blocks of
+    one outer group (s*mu > m) — the Eq. 14/15 collision terms must keep
+    SA-BDCD exact."""
+    import jax
+    from repro.core.linalg import sample_block
+
+    rng = np.random.default_rng(3)
+    m, n = 10, 24
+    A = rng.standard_normal((m, n)).astype(np.float32)
+    b = np.sign(rng.standard_normal(m)).astype(np.float32)
+    b[b == 0] = 1.0
+    prob = SVMProblem(A=A, b=b, lam=1.0, loss=loss)
+    s, mu, H = 8, 2, 16
+    # verify the shared index stream actually collides within an s-group
+    key = jax.random.key(0)
+    idxs = np.asarray(jax.vmap(
+        lambda h: sample_block(jax.random.fold_in(key, h), m, mu))(
+        np.arange(1, s + 1)))
+    assert len(np.unique(idxs)) < idxs.size
+    base = bdcd_svm(prob, SolverConfig(block_size=mu, iterations=H))
+    sa = sa_bdcd_svm(prob, SolverConfig(block_size=mu, iterations=H, s=s))
+    np.testing.assert_allclose(np.asarray(sa.objective),
+                               np.asarray(base.objective),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sa.aux["alpha"]),
+                               np.asarray(base.aux["alpha"]), atol=1e-4)
+
+
+def test_svm_blocked_duality_gap_decreases(svm_data):
+    """Convergence of the blocked SA path: the duality gap shrinks as H
+    grows (weak duality keeps it nonnegative up to roundoff)."""
+    A, b = svm_data
+    prob = SVMProblem(A=A, b=b, lam=1.0, loss="l2")
+    gaps = []
+    for H in (16, 64, 256):
+        res = sa_bdcd_svm(prob, SolverConfig(block_size=4, iterations=H,
+                                             s=4))
+        gaps.append(float(duality_gap(prob, res.x, res.aux["alpha"])))
+    assert gaps[-1] < gaps[0]
+    assert all(g > -1e-3 for g in gaps)
+
+
+def test_lasso_symmetric_gram_matches_dense(lasso_data):
+    """Triangle-packed Allreduce (cfg.symmetric_gram) reduces the same
+    values as the dense path, only re-laid-out -> identical iterates."""
+    A, b, lam = lasso_data
+    prob = LassoProblem(A=A, b=b, lam=lam)
+    cfg = SolverConfig(block_size=4, iterations=32, s=8)
+    cfg_sym = SolverConfig(block_size=4, iterations=32, s=8,
+                           symmetric_gram=True)
+    dense = sa_acc_bcd_lasso(prob, cfg)
+    packed = sa_acc_bcd_lasso(prob, cfg_sym)
+    np.testing.assert_allclose(np.asarray(packed.objective),
+                               np.asarray(dense.objective), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(packed.x), np.asarray(dense.x),
+                               atol=1e-6)
+
+
+def test_svm_symmetric_gram_matches_dense(svm_data):
+    A, b = svm_data
+    prob = SVMProblem(A=A, b=b, lam=1.0, loss="l1")
+    cfg = SolverConfig(block_size=2, iterations=32, s=8)
+    cfg_sym = SolverConfig(block_size=2, iterations=32, s=8,
+                           symmetric_gram=True)
+    dense = sa_bdcd_svm(prob, cfg)
+    packed = sa_bdcd_svm(prob, cfg_sym)
+    np.testing.assert_allclose(np.asarray(packed.objective),
+                               np.asarray(dense.objective), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(packed.x), np.asarray(dense.x),
+                               atol=1e-6)
+
+
+@pytest.mark.slow
+def test_svm_blocked_final_error_f64():
+    """SA-BDCD == BDCD at machine-epsilon scale in f64 (Table III
+    analogue for the blocked SVM; acceptance bound 1e-10)."""
+    code = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from repro.core import SVMProblem, SolverConfig, bdcd_svm, sa_bdcd_svm
+rng = np.random.default_rng(7)
+m, n = 96, 40
+A = rng.standard_normal((m, n))
+w = rng.standard_normal(n)
+b = np.sign(A @ w + 0.1 * rng.standard_normal(m)); b[b == 0] = 1.0
+worst = 0.0
+for loss in ("l1", "l2"):
+    prob = SVMProblem(A=A, b=b, lam=1.0, loss=loss)
+    for mu in (1, 4):
+        base = bdcd_svm(prob, SolverConfig(block_size=mu, iterations=64,
+                                           dtype=jnp.float64))
+        sa = sa_bdcd_svm(prob, SolverConfig(block_size=mu, iterations=64,
+                                            s=8, dtype=jnp.float64))
+        o1, o2 = np.asarray(base.objective), np.asarray(sa.objective)
+        dev = float(np.max(np.abs(o1 - o2) / np.maximum(np.abs(o1), 1e-30)))
+        xdev = float(np.max(np.abs(np.asarray(base.x) - np.asarray(sa.x))))
+        worst = max(worst, dev, xdev)
+print("DEV", worst)
+assert worst < 1e-10, worst
+"""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    dev = float(out.stdout.split("DEV")[1].strip())
+    assert dev < 1e-10
+
+
+@pytest.mark.slow
 def test_final_relative_error_f64_table3():
     """Table III analogue: in f64 the final relative objective error of
     SA vs non-SA is at machine-epsilon scale (paper: ~1e-16; we allow

@@ -1,9 +1,12 @@
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (SVMProblem, SolverConfig, dcd_svm, dual_objective,
-                        duality_gap, primal_objective, sa_svm)
+from repro.core import (SVMProblem, SolverConfig, bdcd_svm, dcd_svm,
+                        dual_objective, duality_gap, primal_objective,
+                        sa_bdcd_svm, sa_svm)
 
 
 def test_incremental_dual_tracking_exact(svm_data):
@@ -43,6 +46,38 @@ def test_x_is_dual_combination(svm_data):
     A, b = svm_data
     prob = SVMProblem(A=A, b=b, lam=1.0, loss="l2")
     res = sa_svm(prob, SolverConfig(iterations=64, s=8))
+    alpha = np.asarray(res.aux["alpha"])
+    np.testing.assert_allclose(np.asarray(res.x),
+                               A.T @ (b * alpha), atol=1e-3)
+
+
+def test_blocked_incremental_dual_tracking_exact(svm_data):
+    """The block dual-objective increments (DESIGN.md) must agree with the
+    direct quadratic-form evaluation, for both hinge losses."""
+    A, b = svm_data
+    for loss in ("l1", "l2"):
+        prob = SVMProblem(A=A, b=b, lam=1.0, loss=loss)
+        res = bdcd_svm(prob, SolverConfig(block_size=4, iterations=96))
+        tracked = float(res.objective[-1])
+        direct = float(dual_objective(prob, res.aux["alpha"]))
+        assert abs(tracked - direct) < 1e-3 * max(1.0, abs(direct))
+
+
+def test_blocked_alpha_box_constraints(svm_data):
+    A, b = svm_data
+    prob = SVMProblem(A=A, b=b, lam=1.0, loss="l1")
+    for solve in (lambda c: bdcd_svm(prob, c),
+                  lambda c: sa_bdcd_svm(prob, dataclasses.replace(c, s=8))):
+        res = solve(SolverConfig(block_size=4, iterations=128))
+        alpha = np.asarray(res.aux["alpha"])
+        assert np.all(alpha >= -1e-6)
+        assert np.all(alpha <= prob.lam + 1e-6)   # nu = lam for L1
+
+
+def test_blocked_x_is_dual_combination(svm_data):
+    A, b = svm_data
+    prob = SVMProblem(A=A, b=b, lam=1.0, loss="l2")
+    res = sa_bdcd_svm(prob, SolverConfig(block_size=4, iterations=64, s=8))
     alpha = np.asarray(res.aux["alpha"])
     np.testing.assert_allclose(np.asarray(res.x),
                                A.T @ (b * alpha), atol=1e-3)
