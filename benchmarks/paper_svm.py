@@ -1,13 +1,15 @@
 """Paper SVM artifacts: Fig. 5 (duality gap, SA == non-SA), Table V
-(speedups at best s from the machine model), and the blocked-SVM
-(s, mu) sweep for BDCD / SA-BDCD."""
+(speedups at best s from the machine model), the blocked-SVM (s, mu)
+sweep for BDCD / SA-BDCD, and the kernel-SVM (s, mu, kernel) sweep for
+K-BDCD / SA-K-BDCD (arXiv:2406.18001)."""
 import dataclasses
 
 import numpy as np
 
 from benchmarks.common import emit, timeit
 from repro.core import (SVMProblem, SolverConfig, bdcd_svm, dcd_svm,
-                        duality_gap, sa_bdcd_svm, sa_svm)
+                        duality_gap, kbdcd_svm, kernel_dual_objective,
+                        sa_bdcd_svm, sa_kbdcd_svm, sa_svm)
 from repro.core.cost_model import (Machine, PAPER_DATASETS, best_s,
                                    svm_speedup)
 from repro.data.sparse import make_svm_dataset
@@ -79,6 +81,56 @@ def blocked_smu_sweep():
                      f"dual={o2[-1]:.5f};sa_traj_dev={dev:.2e}")
 
 
+KERNEL_GRID = (("linear", None), ("rbf", {"gamma": 0.1}),
+               ("poly", {"degree": 3, "coef0": 1.0, "scale": 0.1}))
+
+
+def kernel_smu_sweep():
+    """Kernel-SVM sweep over kernel x (s, mu): per-iteration wall time,
+    SA-K-BDCD == K-BDCD trajectory deviation, and the final dual vs the
+    direct m x m quadratic form. One Allreduce per s inner iterations,
+    kernelization applied post-reduction (no extra messages)."""
+    A, b = make_svm_dataset("w1a-like", seed=0)
+    H = 256
+    for kern, params in KERNEL_GRID:
+        prob = SVMProblem(A=A, b=b, lam=1.0, loss="l2", kernel=kern,
+                          kernel_params=params)
+        for mu in (1, 4):
+            cfg = SolverConfig(block_size=mu, iterations=H)
+            us, res = timeit(lambda: kbdcd_svm(prob, cfg), repeats=1)
+            o1 = np.asarray(res.objective)
+            direct = float(kernel_dual_objective(prob, res.aux["alpha"]))
+            emit(f"kernel/w1a-like/{kern}/mu{mu}/s1", us / H,
+                 f"dual={o1[-1]:.5f};direct={direct:.5f}")
+            for s in (8, 64):
+                us_sa, res_sa = timeit(
+                    lambda: sa_kbdcd_svm(prob,
+                                         dataclasses.replace(cfg, s=s)),
+                    repeats=1)
+                o2 = np.asarray(res_sa.objective)
+                dev = float(np.max(np.abs(o1 - o2)
+                                   / np.maximum(np.abs(o1), 1e-9)))
+                emit(f"kernel/w1a-like/{kern}/mu{mu}/s{s}", us_sa / H,
+                     f"dual={o2[-1]:.5f};sa_traj_dev={dev:.2e};"
+                     f"impl={res_sa.aux['inner_impl']}")
+
+
+def kernel_model_speedups():
+    """Machine-model speedups for SA-K-BDCD: the kernel path moves the
+    (m, s*mu) cross block instead of the (s*mu, s*mu+1) Gram, so the
+    best-s optimum shifts toward smaller s on bandwidth-bound machines."""
+    machine = Machine.cray_xc30()
+    for ds, P in (("rcv1.binary", 240), ("gisette", 3072)):
+        dims = PAPER_DATASETS[ds]
+        for kern in ("linear", "rbf"):
+            for mu in (1, 8):
+                s_star, sp = best_s(dims, H=200_000, mu=mu, P=P,
+                                    machine=machine, kind="svm",
+                                    kernel=kern)
+                emit(f"kernel_model/{ds}/P{P}/{kern}/mu{mu}", 0.0,
+                     f"model_best_s={s_star};model_speedup={sp:.2f}")
+
+
 def blocked_model_speedups():
     """Machine-model speedups for SA-BDCD over the (s, mu) grid (Table V
     analogue for the blocked variant)."""
@@ -98,6 +150,8 @@ def main():
     table5_speedups()
     blocked_smu_sweep()
     blocked_model_speedups()
+    kernel_smu_sweep()
+    kernel_model_speedups()
 
 
 if __name__ == "__main__":

@@ -77,6 +77,36 @@ print("RESULT " + json.dumps(out))
 """
 
 
+SVM_SOLVER_CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys, re, jax
+flags = json.loads(sys.argv[1])
+from repro.core.distributed import lower_svm_step
+from repro.core.types import SolverConfig
+from repro.roofline.analysis import collective_bytes_from_hlo, \
+    cost_analysis_dict
+mesh = jax.make_mesh((512,), ("model",))
+H, s, mu = 64, flags.get("s", 16), flags.get("mu", 8)
+kernel = flags.get("kernel", "linear")
+params = {"gamma": 0.1} if kernel == "rbf" else None
+cfg = SolverConfig(block_size=mu, iterations=H, s=s,
+                   track_objective=False)
+lowered = lower_svm_step(cfg, mesh, m=8192, n=131072, axes="model",
+                         kernel=kernel, kernel_params=params)
+c = lowered.compile()
+txt = c.as_text()
+coll = collective_bytes_from_hlo(txt)
+static = len(re.findall(r"= \S+ all-reduce\(", txt))
+ca = cost_analysis_dict(c)
+out = {"s": s, "mu": mu, "kernel": kernel, "static_allreduce": static,
+       "trips": H // s, "runtime_msgs": static * (H // s),
+       "coll_bytes_per_outer": coll["total"],
+       "flops": ca.get("flops"), "bytes": ca.get("bytes accessed")}
+print("RESULT " + json.dumps(out))
+"""
+
+
 def run_config(code: str, flags: dict, timeout=1500):
     env = dict(os.environ, PYTHONPATH=SRC)
     out = subprocess.run([sys.executable, "-c", code, json.dumps(flags)],
@@ -127,6 +157,16 @@ def main():
             ("s64_paper", SOLVER_CODE, {"s": 64, "multi_pod": True}),
             ("s64_sym_gram", SOLVER_CODE,
              {"s": 64, "sym_gram": True, "multi_pod": True}),
+        ],
+        # Cell C2: the (kernel-)SVM SA solver — the kernel rows move the
+        # (m, s*mu) cross block instead of the reduced Gram; ONE
+        # all-reduce per outer iteration either way.
+        "sa_svm": [
+            ("s1_classical", SVM_SOLVER_CODE, {"s": 1}),
+            ("s16_paper", SVM_SOLVER_CODE, {"s": 16}),
+            ("s64_paper", SVM_SOLVER_CODE, {"s": 64}),
+            ("s16_rbf", SVM_SOLVER_CODE, {"s": 16, "kernel": "rbf"}),
+            ("s64_rbf", SVM_SOLVER_CODE, {"s": 64, "kernel": "rbf"}),
         ],
         # Memory-bound prefill: attention chunk size + bf16 probs.
         "tinyllama_prefill": [

@@ -25,6 +25,8 @@ def _register():
         "table5": paper_svm.table5_speedups,
         "blocked_svm": paper_svm.blocked_smu_sweep,
         "blocked_svm_model": paper_svm.blocked_model_speedups,
+        "kernel_svm": paper_svm.kernel_smu_sweep,
+        "kernel_svm_model": paper_svm.kernel_model_speedups,
         "collectives": collective_count.main,
         "roofline": roofline_bench.main,
     })

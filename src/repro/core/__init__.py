@@ -5,8 +5,9 @@ Public API:
     solve_lasso, solve_svm              — single-host (dispatch on cfg.s)
     solve_lasso_sharded, solve_svm_sharded — distributed (shard_map)
 """
-from repro.core.types import (LassoProblem, SVMProblem, SolverConfig,
-                              SolverResult)
+from repro.core.types import (KERNELS, KernelSpec, LassoProblem,
+                              SVMProblem, SolverConfig, SolverResult,
+                              register_kernel)
 from repro.core.lasso import (acc_bcd_lasso, acc_cd_lasso, bcd_lasso,
                               cd_lasso, solve_lasso)
 from repro.core.sa_lasso import (sa_acc_bcd_lasso, sa_acc_cd_lasso,
@@ -14,13 +15,17 @@ from repro.core.sa_lasso import (sa_acc_bcd_lasso, sa_acc_cd_lasso,
 from repro.core.svm import bdcd_svm, dcd_svm, duality_gap, \
     dual_objective, primal_objective, solve_svm
 from repro.core.sa_svm import sa_bdcd_svm, sa_svm
+from repro.core.kernel_svm import (kbdcd_svm, kernel_dual_objective,
+                                   sa_kbdcd_svm, solve_ksvm)
 from repro.core.distributed import solve_lasso_sharded, solve_svm_sharded
 
 __all__ = [
+    "KERNELS", "KernelSpec", "register_kernel",
     "LassoProblem", "SVMProblem", "SolverConfig", "SolverResult",
     "acc_bcd_lasso", "acc_cd_lasso", "bcd_lasso", "cd_lasso", "solve_lasso",
     "sa_acc_bcd_lasso", "sa_acc_cd_lasso", "sa_bcd_lasso", "sa_cd_lasso",
     "bdcd_svm", "dcd_svm", "sa_bdcd_svm", "sa_svm", "solve_svm",
+    "kbdcd_svm", "sa_kbdcd_svm", "solve_ksvm", "kernel_dual_objective",
     "duality_gap", "dual_objective", "primal_objective",
     "solve_lasso_sharded", "solve_svm_sharded",
 ]

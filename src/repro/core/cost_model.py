@@ -72,16 +72,33 @@ def lasso_costs(dims: ProblemDims, H: int, mu: int, s: int, P: int
     return {"F": F, "L": L, "W": W, "M": M, "I": float(H)}
 
 
+# Approximate flop cost of one kernel-function evaluation, given the
+# already-computed linear cross product (transform applied on the
+# replicated post-Allreduce block): exp/pow and the norm combine.
+KERNEL_EVAL_FLOPS = {"linear": 0.0, "poly": 3.0, "rbf": 5.0}
+
+
 def svm_costs(dims: ProblemDims, H: int, s: int, P: int,
-              mu: int = 1) -> Dict[str, float]:
+              mu: int = 1, kernel: str = "linear") -> Dict[str, float]:
     """(SA-)BDCD SVM analogue of Table I: mu dual coordinates per
     iteration, Gram is (s*mu) x (s*mu). mu = 1, s = 1 is classical DCD.
 
-    Per inner iteration: the Gram/projection GEMM costs mu^2 s f n / P
-    flops (amortized over the outer group), the redundant inner updates
-    cost s mu^2 (cross terms), the mu x mu subproblem mu^3 (power
-    iteration). The Allreduce moves s mu^2 words every s iterations ->
-    W = H s mu^2 log P at L = (H/s) log P messages."""
+    Linear (kernel="linear", the paper's Alg. 3-4 / BDCD): per inner
+    iteration the Gram/projection GEMM costs mu^2 s f n / P flops
+    (amortized over the outer group), the redundant inner updates cost
+    s mu^2 (cross terms), the mu x mu subproblem mu^3 (power iteration).
+    The Allreduce moves s mu^2 words every s iterations ->
+    W = H s mu^2 log P at L = (H/s) log P messages.
+
+    Kernelized ((SA-)K-BDCD, arXiv:2406.18001): the per-group message is
+    the (m, s*mu) cross block A Y^T (the m-dimensional dual residual f
+    replaces the n/P-partitioned primal), so W grows to H mu m log P and
+    F gains the cross-product GEMM m mu s f n / P plus the
+    kernel-evaluation transform c_k m mu per inner iteration
+    (c_k = KERNEL_EVAL_FLOPS[kernel], applied on the replicated reduced
+    block — kernelizing adds NO messages and NO latency). L is unchanged:
+    still one Allreduce per outer iteration.
+    """
     logP = max(math.log2(max(P, 2)), 1.0)
     F = H * mu * mu * s * dims.f * dims.n / P + H * s * mu * mu \
         + H * mu ** 3
@@ -89,6 +106,20 @@ def svm_costs(dims: ProblemDims, H: int, s: int, P: int,
     W = H * s * mu * mu * logP
     M = (dims.f * dims.m * dims.n) / P + dims.m + s * s * mu * mu \
         + dims.n / P
+    if kernel != "linear":
+        if kernel not in KERNEL_EVAL_FLOPS:
+            raise ValueError(
+                f"unknown kernel {kernel!r}; known: "
+                f"{sorted(KERNEL_EVAL_FLOPS)}")
+        ck = KERNEL_EVAL_FLOPS[kernel]
+        # cross-product GEMM + kernel transform + the f/alpha GEMV work,
+        # all per inner iteration (amortized over the outer group).
+        F = H * mu * dims.m * dims.f * dims.n / P \
+            + ck * H * mu * dims.m + H * s * mu * mu + H * mu ** 3 \
+            + H * mu * dims.m
+        W = H * mu * dims.m * logP
+        M = (dims.f * dims.m * dims.n) / P + 3.0 * dims.m \
+            + s * mu * dims.m + s * s * mu * mu
     return {"F": F, "L": L, "W": W, "M": M, "I": float(H)}
 
 
@@ -106,15 +137,16 @@ def lasso_speedup(dims: ProblemDims, H: int, mu: int, s: int, P: int,
 
 
 def svm_speedup(dims: ProblemDims, H: int, s: int, P: int,
-                machine: Machine, mu: int = 1) -> float:
-    t1 = predicted_time(svm_costs(dims, H, 1, P, mu), machine)
-    ts = predicted_time(svm_costs(dims, H, s, P, mu), machine)
+                machine: Machine, mu: int = 1,
+                kernel: str = "linear") -> float:
+    t1 = predicted_time(svm_costs(dims, H, 1, P, mu, kernel), machine)
+    ts = predicted_time(svm_costs(dims, H, s, P, mu, kernel), machine)
     return t1 / ts
 
 
 def best_s(dims: ProblemDims, H: int, mu: int, P: int, machine: Machine,
            candidates=(1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024),
-           kind: str = "lasso"):
+           kind: str = "lasso", kernel: str = "linear"):
     """Sweep s and return (s*, speedup(s*)) — the paper's tuning knob.
 
     The existence of an interior optimum (speedup rises with s while
@@ -123,7 +155,7 @@ def best_s(dims: ProblemDims, H: int, mu: int, P: int, machine: Machine,
     """
     fn = (lambda s: lasso_speedup(dims, H, mu, s, P, machine)) \
         if kind == "lasso" \
-        else (lambda s: svm_speedup(dims, H, s, P, machine, mu))
+        else (lambda s: svm_speedup(dims, H, s, P, machine, mu, kernel))
     best = max(candidates, key=fn)
     return best, fn(best)
 

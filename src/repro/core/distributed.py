@@ -97,7 +97,9 @@ def solve_svm_sharded(problem: SVMProblem, cfg: SolverConfig,
 
     def local_solve(A_loc, b_full):
         local_problem = SVMProblem(A=A_loc, b=b_full, lam=problem.lam,
-                                   loss=problem.loss)
+                                   loss=problem.loss,
+                                   kernel=problem.kernel,
+                                   kernel_params=problem.kernel_params)
         res = svm_lib.solve_svm(local_problem, cfg, axis_name=axes)
         return res.x, res.objective, res.aux["alpha"]
 
@@ -133,13 +135,16 @@ def lower_lasso_step(cfg: SolverConfig, mesh: Mesh, m: int, n: int,
 
 
 def lower_svm_step(cfg: SolverConfig, mesh: Mesh, m: int, n: int,
-                   axes: AxisNames = "model", dtype=jnp.float32):
-    """Lower a full distributed SVM solve for shape (m, n)."""
+                   axes: AxisNames = "model", dtype=jnp.float32,
+                   kernel: str = "linear", kernel_params=None):
+    """Lower a full distributed SVM solve for shape (m, n); ``kernel``
+    routes through the kernelized (SA-)K-BDCD solvers."""
     col_spec = P(None, axes) if isinstance(axes, str) else P(None, tuple(axes))
     x_spec = P(axes) if isinstance(axes, str) else P(tuple(axes))
 
     def local_solve(A_loc, b_full):
-        prob = SVMProblem(A=A_loc, b=b_full, lam=1.0)
+        prob = SVMProblem(A=A_loc, b=b_full, lam=1.0, kernel=kernel,
+                          kernel_params=kernel_params)
         res = svm_lib.solve_svm(prob, cfg, axis_name=axes)
         return res.x, res.objective
 

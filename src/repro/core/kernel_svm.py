@@ -1,0 +1,258 @@
+"""Kernel SVM subsystem — K-BDCD and its s-step synchronization-avoiding
+unroll SA-K-BDCD (after Shao & Devarakonda, arXiv:2406.18001).
+
+The paper's SA trick extends to kernel methods by swapping the linear
+Gram block  Y Y^T  for a kernel block  K(Y, Y): the dual problem becomes
+
+    min_a  1/2 a^T (diag(b) K(A, A) diag(b) + gamma I) a - e^T a,
+    0 <= a_i <= nu
+
+and the only structural change to (SA-)BDCD is the state vector. With a
+nonlinear kernel there is no n-dimensional primal to shadow, so the
+solvers maintain the replicated dual-residual vector
+
+    f = K(A, A) (b * alpha)   in R^m
+
+("function evaluations at every data point"). The block gradient is then
+a pure gather  g_B = b_B * f[B] - 1 + gamma a_B,  and f's update needs
+the m x mu kernel column block  K(A, Y)  the iteration already
+communicates.
+
+Data layout (paper Sec. V, unchanged): A is 1D-COLUMN-partitioned
+(m, n_loc); alpha, b, f in R^m are replicated. Per-iteration
+communication for K-BDCD: ONE fused Allreduce of the local cross
+products  [A Y^T | rownorms(A)]  (the norms column rides along only for
+kernels that need it, e.g. rbf). The kernel transform itself is applied
+AFTER the reduction on the replicated copy, so kernelizing changes no
+communication structure. SA-K-BDCD amortizes: sample all s blocks up
+front, Allreduce the (m, s*mu [+1]) cross block once, kernelize, and run
+the s inner updates redundantly — through the same
+``repro.kernels.svm_inner`` fused Pallas kernel as the linear solver
+(``cfg.use_pallas``; the chosen path lands in
+``SolverResult.aux["inner_impl"]``). Deferred updates per group: ONE
+local GEMV  f += K(A, Y) (b * theta)  (plus the linear primal shadow
+x += Y^T (b * theta), exact for kernel="linear").
+
+``kernel="linear"`` reproduces ``bdcd_svm`` / ``sa_bdcd_svm`` iterates
+exactly (f = A x by definition) — tested in tests/test_kernel_svm.py —
+at O(m) replicated state instead of the (mu, mu+1) reduced message, so
+``solve_svm`` keeps routing linear problems to the cheaper primal-shadow
+solvers and sends everything else here.
+
+``cfg.symmetric_gram`` does not apply (the (m, s*mu) cross block is not
+symmetric) and is ignored. Remainder iterations: as in the other SA
+solvers, floor(H/s) full groups run in a scan and one tail group of
+H mod s iterations finishes the schedule.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linalg
+from repro.core.sa_loop import grouped_impl_label, run_grouped
+from repro.core.types import SVMProblem, SolverConfig, SolverResult
+from repro.kernels.svm_inner import inner_impl, svm_inner_loop
+
+
+def _local_norms(A, needs_norms: bool):
+    """(m, 1) local partial squared row norms (loop-invariant — computed
+    ONCE per solve and re-fused into every iteration's Allreduce), or
+    None for kernels that don't need them."""
+    return jnp.sum(A * A, axis=1, keepdims=True) if needs_norms else None
+
+
+def _cross_and_norms(A, Y, axis_name, norms_local):
+    """ONE fused Allreduce of  [A Y^T | rownorms]:  the (m, c) linear
+    cross products between every data point and the c sampled rows, plus
+    (when the kernel needs them) the precomputed squared-row-norms column
+    — keeping the solver at exactly one Allreduce per (outer) iteration
+    with no setup collective."""
+    local = A @ Y.T                                       # (m, c) partial
+    if norms_local is None:
+        return linalg.preduce(local, axis_name), None
+    red = linalg.preduce(
+        jnp.concatenate([local, norms_local], axis=1), axis_name)
+    return red[:, :-1], red[:, -1]
+
+
+def _kernelize(problem: SVMProblem, cross, anorms, flat_idx, dtype):
+    """Apply the registered kernel transform to the reduced cross block:
+    K(A, Y)[i, j] = k(a_i, y_j), with y's norms gathered from a's."""
+    spec = problem.kernel_spec
+    ynorms = None if anorms is None else anorms[flat_idx]
+    return spec.fn(cross, anorms, ynorms,
+                   problem.kernel_params).astype(dtype)
+
+
+def kernel_dual_objective(problem: SVMProblem, alpha,
+                          axis_name: Optional[object] = None):
+    """f_D(alpha) = 1/2 (b a)^T K (b a) + gamma/2 ||a||^2 - e^T a,
+    evaluated directly from the full m x m kernel matrix (diagnostic /
+    test oracle — O(m^2) memory)."""
+    A = jnp.asarray(problem.A)
+    b = jnp.asarray(problem.b, A.dtype)
+    alpha = jnp.asarray(alpha, A.dtype)
+    spec = problem.kernel_spec
+    cross, anorms = _cross_and_norms(A, A, axis_name,
+                                     _local_norms(A, spec.needs_norms))
+    Kmat = spec.fn(cross, anorms, anorms, problem.kernel_params)
+    ba = b * alpha
+    return 0.5 * ba @ (Kmat @ ba) \
+        + 0.5 * problem.gamma * jnp.sum(alpha * alpha) - jnp.sum(alpha)
+
+
+def _init_state(problem: SVMProblem, cfg: SolverConfig, axis_name,
+                alpha0):
+    """alpha, its primal shadow x = A^T (b alpha) (local shard), and the
+    replicated dual residual f = K(A, A)(b alpha). alpha0 = None starts
+    at zero, where f and x are zero without any communication."""
+    A = jnp.asarray(problem.A, cfg.dtype)
+    b = jnp.asarray(problem.b, cfg.dtype)
+    m = A.shape[0]
+    if alpha0 is None:
+        alpha = jnp.zeros((m,), cfg.dtype)
+        f = jnp.zeros((m,), cfg.dtype)
+        x = jnp.zeros((A.shape[1],), cfg.dtype)
+        return A, b, alpha, x, f
+    alpha = jnp.asarray(alpha0, cfg.dtype)
+    spec = problem.kernel_spec
+    cross, anorms = _cross_and_norms(A, A, axis_name,
+                                     _local_norms(A, spec.needs_norms))
+    Kmat = spec.fn(cross, anorms, anorms,
+                   problem.kernel_params).astype(cfg.dtype)
+    f = Kmat @ (b * alpha)
+    x = A.T @ (b * alpha)
+    return A, b, alpha, x, f
+
+
+def kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
+              axis_name: Optional[object] = None,
+              alpha0=None) -> SolverResult:
+    """Kernel block dual coordinate descent (K-BDCD).
+
+    Per iteration: sample a block B of mu rows, Allreduce the fused
+    [A Y^T | norms] cross block (ONE message), kernelize it to the
+    column block K(A, Y), and take the projected block-gradient step
+
+        alpha_B <- clip(alpha_B - g_B / lambda_max(K_BB + gamma I), 0, nu)
+
+    with  g_B = b_B * f[B] - 1 + gamma alpha_B  a pure gather off the
+    maintained dual residual f, then  f += K(A, Y)(b_B theta). mu = 1
+    skips the power iteration: the (1, 1) block k(a_i, a_i) + gamma IS
+    the step size. The dual objective is tracked incrementally exactly
+    as in ``bdcd_svm`` with G -> K_BB + gamma I (DESIGN.md).
+    """
+    mu = cfg.block_size
+    gamma = jnp.asarray(problem.gamma, cfg.dtype)
+    nu = jnp.asarray(problem.nu, cfg.dtype)
+    key = jax.random.key(cfg.seed)
+    A, b, alpha, x, f = _init_state(problem, cfg, axis_name, alpha0)
+    norms_local = _local_norms(A, problem.kernel_spec.needs_norms)
+    m = A.shape[0]
+    eye_mu = jnp.eye(mu, dtype=cfg.dtype)
+
+    def step(carry, h):
+        alpha, x, f, dual = carry
+        idx = linalg.sample_block(jax.random.fold_in(key, h), m, mu)
+        Y = A[idx]                                       # (mu, n_loc) local
+        b_B = b[idx]
+        # --- Communication: ONE fused Allreduce of [A Y^T | norms] ---
+        cross, anorms = _cross_and_norms(A, Y, axis_name, norms_local)
+        Kcol = _kernelize(problem, cross, anorms, idx, cfg.dtype)
+        KBB = Kcol[idx] + gamma * eye_mu                 # (mu, mu)
+        a_B = alpha[idx]
+        g = b_B * f[idx] - 1.0 + gamma * a_B
+        # mu = 1: the (1, 1) block IS the eigenvalue — skip the power loop.
+        v = KBB[0, 0] if mu == 1 \
+            else linalg.power_iteration_max_eig(KBB, cfg.power_iters)
+        gbar = jnp.abs(jnp.clip(a_B - g, 0.0, nu) - a_B)
+        theta = jnp.where(
+            gbar != 0.0,
+            jnp.clip(a_B - g / v, 0.0, nu) - a_B,
+            0.0)
+        alpha = alpha.at[idx].add(theta)
+        bt = b_B * theta
+        f = f + Kcol @ bt                                # replicated, local
+        x = x + Y.T @ bt                                 # primal shadow
+        dual = dual + jnp.sum(theta * g) + 0.5 * bt @ (KBB @ bt)
+        obj = dual if cfg.track_objective else jnp.asarray(0.0, cfg.dtype)
+        return (alpha, x, f, dual), obj
+
+    dual0 = jnp.asarray(0.0, cfg.dtype)
+    (alpha, x, f, dual), objs = jax.lax.scan(
+        step, (alpha, x, f, dual0), jnp.arange(1, cfg.iterations + 1))
+    return SolverResult(x=x, objective=objs,
+                        aux={"alpha": alpha, "dual": dual, "f": f})
+
+
+def sa_kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
+                 axis_name: Optional[object] = None,
+                 alpha0=None) -> SolverResult:
+    """s-step unrolled K-BDCD: identical iterates to ``kbdcd_svm`` in
+    exact arithmetic, ONE Allreduce per s inner iterations.
+
+    Per outer group: Allreduce the (m, s*mu [+1]) cross block once,
+    kernelize it to K(A, Y_group), slice out the (s*mu, s*mu) block
+    K(Y, Y) whose off-diagonal blocks carry the inner cross terms, and
+    run the s dependent updates through ``repro.kernels.svm_inner`` on
+    replicated data — the projections are the gathered f_sk[idx] (no
+    projection communication at all, unlike the linear solver). Deferred
+    per group:  f += K(A, Y) vec(b theta)  and the primal shadow GEMV.
+    """
+    mu = cfg.block_size
+    gamma = jnp.asarray(problem.gamma, cfg.dtype)
+    gamma_f, nu_f = float(problem.gamma), float(problem.nu)
+    key = jax.random.key(cfg.seed)
+    s, H = cfg.s, cfg.iterations
+    A, b, alpha, x, f = _init_state(problem, cfg, axis_name, alpha0)
+    norms_local = _local_norms(A, problem.kernel_spec.needs_norms)
+    m = A.shape[0]
+
+    def group(carry, start, s_grp):
+        alpha, x, f, dual = carry
+        hs = start + 1 + jnp.arange(s_grp)
+        idxs = jax.vmap(
+            lambda h: linalg.sample_block(jax.random.fold_in(key, h),
+                                          m, mu))(hs)     # (s_grp, mu)
+        flat = idxs.reshape(s_grp * mu)
+        Y = A[flat]                                       # (s_grp*mu, n_loc)
+        b_sel = b[flat].reshape(s_grp, mu)
+        # --- Communication: ONE fused Allreduce of [A Y^T | norms] ---
+        cross, anorms = _cross_and_norms(A, Y, axis_name, norms_local)
+        Kfull = _kernelize(problem, cross, anorms, flat, cfg.dtype)
+        Kblock = Kfull[flat]                              # K(Y, Y)
+        G = Kblock + gamma * jnp.eye(s_grp * mu, dtype=cfg.dtype)
+        proj = f[flat].reshape(s_grp, mu)                 # f_sk gather
+        a_vals = alpha[flat].reshape(s_grp, mu)
+        theta, deltas = svm_inner_loop(
+            G, proj, b_sel, a_vals, idxs, gamma=gamma_f, nu=nu_f,
+            power_iters=cfg.power_iters, use_pallas=cfg.use_pallas)
+        theta = theta.astype(cfg.dtype)
+        deltas = deltas.astype(cfg.dtype)
+        bt = (b_sel * theta).reshape(s_grp * mu)
+        alpha = alpha.at[flat].add(theta.reshape(s_grp * mu))
+        f = f + Kfull @ bt                                # deferred GEMV
+        x = x + Y.T @ bt                                  # primal shadow
+        objs = dual + jnp.cumsum(deltas) if cfg.track_objective \
+            else jnp.zeros((s_grp,), cfg.dtype)
+        dual = dual + jnp.sum(deltas)
+        return (alpha, x, f, dual), objs
+
+    dual0 = jnp.asarray(0.0, cfg.dtype)
+    (alpha, x, f, dual), objs = run_grouped(
+        group, (alpha, x, f, dual0), H, s, cfg.dtype)
+    return SolverResult(x=x, objective=objs,
+                        aux={"alpha": alpha, "dual": dual, "f": f,
+                             "inner_impl": grouped_impl_label(
+                                 inner_impl, H, s, mu, cfg.use_pallas)})
+
+
+def solve_ksvm(problem: SVMProblem, cfg: SolverConfig,
+               axis_name: Optional[object] = None) -> SolverResult:
+    """Dispatch on cfg.s: classical K-BDCD vs the SA unroll."""
+    if cfg.s > 1:
+        return sa_kbdcd_svm(problem, cfg, axis_name)
+    return kbdcd_svm(problem, cfg, axis_name)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.core import linalg
 from repro.core.lasso import _objective, _prep
+from repro.core.sa_loop import run_grouped
 from repro.core.types import LassoProblem, SolverConfig, SolverResult
 from repro.kernels.gram import gram_t
 
@@ -63,11 +64,12 @@ def _gram_and_proj(Y, vecs, axis_name, symmetric: bool = False,
     return out[:, :smu], out[:, smu:]
 
 
-def _sample_all(key, sampler, k, s):
-    """Sample the s blocks of outer iteration k, matching the non-SA
-    fold_in indices (global iteration ids h = k*s + j, j = 1..s) so SA and
-    non-SA draw bit-identical coordinate sequences."""
-    hs = k * s + 1 + jnp.arange(s)
+def _sample_all(key, sampler, start, s_grp):
+    """Sample the s_grp blocks of the outer group starting after global
+    iteration id ``start``, matching the non-SA fold_in indices
+    (h = start + j, j = 1..s_grp) so SA and non-SA draw bit-identical
+    coordinate sequences."""
+    hs = start + 1 + jnp.arange(s_grp)
     return jax.vmap(lambda h: sampler(jax.random.fold_in(key, h)))(hs)
 
 
@@ -80,15 +82,14 @@ def sa_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
     A, b, n, mu, q, sampler, prox = _prep(problem, cfg)
     key = jax.random.key(cfg.seed)
     s, H = cfg.s, cfg.iterations
-    K = H // s
     m_loc = A.shape[0]
 
     x0 = jnp.zeros((n,), cfg.dtype)
     r0 = -b
 
-    def outer(carry, k):
+    def group(carry, start, s):
         x, r = carry
-        idxs = _sample_all(key, sampler, k, s)            # (s, mu)
+        idxs = _sample_all(key, sampler, start, s)        # (s, mu)
         Y = A[:, idxs.reshape(s * mu)]                    # (m_loc, s*mu) local
         # --- Communication: ONE fused Allreduce ---
         G, P = _gram_and_proj(Y, r[:, None], axis_name,
@@ -132,8 +133,8 @@ def sa_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
             objs = jnp.zeros((s,), cfg.dtype)
         return (x, r_new), objs
 
-    (x, r), objs = jax.lax.scan(outer, (x0, r0), jnp.arange(K))
-    return SolverResult(x=x, objective=objs.reshape(H), aux={"residual": r})
+    (x, r), objs = run_grouped(group, (x0, r0), H, s, cfg.dtype)
+    return SolverResult(x=x, objective=objs, aux={"residual": r})
 
 
 # ---------------------------------------------------------------------------
@@ -145,7 +146,6 @@ def sa_acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
     A, b, n, mu, q, sampler, prox = _prep(problem, cfg)
     key = jax.random.key(cfg.seed)
     s, H = cfg.s, cfg.iterations
-    K = H // s
     m_loc = A.shape[0]
 
     theta0 = jnp.asarray(mu / n, cfg.dtype)
@@ -156,9 +156,9 @@ def sa_acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
     ztil0 = -b
     ytil0 = jnp.zeros_like(b)
 
-    def outer(carry, k):
+    def group(carry, start, s):
         z, y, ztil, ytil = carry
-        idxs = _sample_all(key, sampler, k, s)            # (s, mu)
+        idxs = _sample_all(key, sampler, start, s)        # (s, mu)
         Y = A[:, idxs.reshape(s * mu)]                    # (m_loc, s*mu) local
         # --- Communication: ONE fused Allreduce (Alg. 2 lines 11-12) ---
         G, P = _gram_and_proj(Y, jnp.stack([ytil, ztil], axis=1), axis_name,
@@ -167,8 +167,8 @@ def sa_acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
         G4 = G.reshape(s, mu, s, mu)
         y_proj = P[:, 0].reshape(s, mu)                   # A_j^T ytil_sk
         z_proj = P[:, 1].reshape(s, mu)                   # A_j^T ztil_sk
-        th_prev = jax.lax.dynamic_slice(thetas, (k * s,), (s,))
-        th_cur = jax.lax.dynamic_slice(thetas, (k * s + 1,), (s,))
+        th_prev = jax.lax.dynamic_slice(thetas, (start,), (s,))
+        th_cur = jax.lax.dynamic_slice(thetas, (start + 1,), (s,))
         coefU = (1.0 - q * th_prev) / (th_prev * th_prev)  # lines 21-22 coeff
 
         def inner(inner_carry, j):
@@ -218,11 +218,11 @@ def sa_acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
             objs = jnp.zeros((s,), cfg.dtype)
         return (z, y, ztil_new, ytil_new), objs
 
-    (z, y, ztil, ytil), objs = jax.lax.scan(
-        outer, (z0, y0, ztil0, ytil0), jnp.arange(K))
+    (z, y, ztil, ytil), objs = run_grouped(
+        group, (z0, y0, ztil0, ytil0), H, s, cfg.dtype)
     thH = thetas[-1]
     x = thH * thH * y + z
-    return SolverResult(x=x, objective=objs.reshape(H),
+    return SolverResult(x=x, objective=objs,
                         aux={"residual": thH * thH * ytil + ztil})
 
 

@@ -1,0 +1,41 @@
+"""Shared outer-loop driver for the SA solvers: floor(H/s) full s-step
+groups inside one lax.scan, then ONE remainder tail group of H mod s
+iterations (the group body is shape-parameterized, so the tail is just a
+second trace at a smaller group size). ceil(H/s) Allreduces total,
+exactly H inner iterations, same fold_in iteration ids as the classical
+solvers. H < s degenerates to a single tail group with zero scan trips.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def run_grouped(group, carry, H: int, s: int, dtype):
+    """Run ``group(carry, start, s_grp) -> (carry, objs (s_grp,))`` over
+    the full schedule; returns (carry, objs (H,))."""
+    K, rem = divmod(H, s)
+    objs = jnp.zeros((0,), dtype)
+    if K:        # full s-step groups
+        carry, objs = jax.lax.scan(
+            lambda c, k: group(c, k * s, s), carry, jnp.arange(K))
+        objs = objs.reshape(K * s)
+    if rem:      # remainder tail group: the last H mod s iterations
+        carry, objs_tail = group(carry, jnp.asarray(K * s), rem)
+        objs = jnp.concatenate([objs, objs_tail])
+    return carry, objs
+
+
+def grouped_impl_label(impl_fn, H: int, s: int, mu: int,
+                       use_pallas: bool) -> str:
+    """The inner-loop implementation(s) the grouped schedule actually
+    runs: the tail group dispatches at (H mod s, mu), which can differ
+    from the full groups' (s, mu) — e.g. an over-VMEM s falls back to
+    "ref" while a small tail still runs "pallas". Mixed runs are
+    labeled "main+tail" so benchmarks never mislabel the timings."""
+    K, rem = divmod(H, s)
+    labels = ([impl_fn(s, mu, use_pallas)] if K else []) \
+        + ([impl_fn(rem, mu, use_pallas)] if rem else [])
+    if len(set(labels)) == 1:
+        return labels[0]
+    return "+".join(labels)

@@ -12,11 +12,21 @@ power iteration for mu > 1) — the classical per-iteration Gram-block
 reductions vanish entirely. Deferred primal update:
 x += Y^T (b * theta), ONE local GEMV per outer iteration.
 
+The s dependent inner updates run through ``repro.kernels.svm_inner``:
+a pure-jnp reference on CPU, or (``cfg.use_pallas``) one fused Pallas
+kernel holding all replicated state in VMEM. The path actually taken is
+surfaced in ``SolverResult.aux["inner_impl"]``.
+
 Same-index collisions across the s blocks of an outer group (paper
-Eq. 14's I_{sk+j}^T I_{sk+t} term) are handled by gathering beta_j from
-the *updated* replicated alpha, and by the Gram cross terms, whose
-off-diagonal blocks hold the raw Y_j Y_t^T even when indices repeat —
-algebraically identical to the classical method, see DESIGN.md.
+Eq. 14's I_{sk+j}^T I_{sk+t} term) are handled by the eq-matrix gather
+inside the inner loop, and by the Gram cross terms, whose off-diagonal
+blocks hold the raw Y_j Y_t^T even when indices repeat — algebraically
+identical to the classical method, see DESIGN.md.
+
+iterations need not divide by s: floor(H/s) full groups run in a scan,
+then ONE remainder group of H mod s iterations finishes the schedule —
+every configuration executes exactly H inner iterations with
+ceil(H/s) Allreduces.
 """
 from __future__ import annotations
 
@@ -27,7 +37,9 @@ import jax.numpy as jnp
 
 from repro.core import linalg
 from repro.core.sa_lasso import _gram_and_proj
+from repro.core.sa_loop import grouped_impl_label, run_grouped
 from repro.core.types import SVMProblem, SolverConfig, SolverResult
+from repro.kernels.svm_inner import inner_impl, svm_inner_loop
 
 
 def sa_bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
@@ -40,75 +52,57 @@ def sa_bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
     m = A.shape[0]
     mu = cfg.block_size
     gamma = jnp.asarray(problem.gamma, cfg.dtype)
-    nu = jnp.asarray(problem.nu, cfg.dtype)
+    gamma_f, nu_f = float(problem.gamma), float(problem.nu)
     key = jax.random.key(cfg.seed)
     s, H = cfg.s, cfg.iterations
-    K = H // s
 
     alpha = jnp.zeros((m,), cfg.dtype) if alpha0 is None \
         else jnp.asarray(alpha0, cfg.dtype)
     x = A.T @ (b * alpha)                                 # line 2 (local)
 
-    def outer(carry, k):
+    def group(carry, start, s_grp):
+        """One outer group of s_grp block updates; ``start`` is the
+        (traced) global iteration id preceding the group."""
         alpha, x, dual = carry
-        # sample the s blocks with the same fold_in ids as the non-SA
-        # solver (global iteration ids h = k*s + j) -> bit-identical draws.
-        hs = k * s + 1 + jnp.arange(s)
+        # sample the blocks with the same fold_in ids as the non-SA
+        # solver (global iteration ids h = start + j) -> bit-identical
+        # draws.
+        hs = start + 1 + jnp.arange(s_grp)
         idxs = jax.vmap(
             lambda h: linalg.sample_block(jax.random.fold_in(key, h),
-                                          m, mu))(hs)     # (s, mu)
-        Y = A[idxs.reshape(s * mu)]                       # (s*mu, n_loc)
-        b_sel = b[idxs.reshape(s * mu)].reshape(s, mu)    # replicated
+                                          m, mu))(hs)     # (s_grp, mu)
+        flat = idxs.reshape(s_grp * mu)
+        Y = A[flat]                                       # (s_grp*mu, n_loc)
+        b_sel = b[flat].reshape(s_grp, mu)                # replicated
         # --- Communication: ONE fused Allreduce of  Y [Y^T | x] ---
         Graw, P = _gram_and_proj(Y.T, x[:, None], axis_name,
                                  symmetric=cfg.symmetric_gram,
                                  use_pallas=cfg.use_pallas)
-        G = Graw + gamma * jnp.eye(s * mu, dtype=cfg.dtype)   # line 9
-        G4 = G.reshape(s, mu, s, mu)
-        x_proj = P[:, 0].reshape(s, mu)                   # line 10: Y x_sk
-
-        def inner(inner_carry, j):
-            alpha, bt_buf, dual = inner_carry
-            idx_j = idxs[j]
-            b_j = b_sel[j]
-            beta = alpha[idx_j]                           # Eq. (14), exact
-            Gj = G4[j]                                    # (mu, s, mu)
-            # Eq. (15): cross terms  Y_j Y_t^T (b_t theta_t)  for t < j.
-            # The +gamma*I in G only touches the diagonal block t == j,
-            # which the t<j mask excludes, so G's off-diagonal blocks are
-            # the raw Y Y^T the equation needs — even when indices repeat
-            # across blocks.
-            cross = jnp.einsum("ptq,tq->tp", Gj, bt_buf)  # (s, mu)
-            mask = (jnp.arange(s) < j).astype(cfg.dtype)
-            rj = x_proj[j] + jnp.einsum("t,tp->p", mask, cross)
-            g = b_j * rj - 1.0 + gamma * beta
-            Gjj = Gj[:, j, :]                             # (mu, mu) diag blk
-            v = linalg.power_iteration_max_eig(Gjj, cfg.power_iters)
-            gbar = jnp.abs(jnp.clip(beta - g, 0.0, nu) - beta)   # line 15
-            theta = jnp.where(
-                gbar != 0.0,
-                jnp.clip(beta - g / v, 0.0, nu) - beta,          # line 16
-                0.0)
-            alpha = alpha.at[idx_j].add(theta)            # line 20
-            bt = b_j * theta
-            bt_buf = bt_buf.at[j].set(bt)
-            dual = dual + jnp.sum(theta * g) + 0.5 * bt @ (Gjj @ bt)
-            return (alpha, bt_buf, dual), dual
-
-        bt_buf0 = jnp.zeros((s, mu), cfg.dtype)
-        (alpha, bt_buf, dual), duals = jax.lax.scan(
-            inner, (alpha, bt_buf0, dual), jnp.arange(s))
+        G = Graw + gamma * jnp.eye(s_grp * mu, dtype=cfg.dtype)  # line 9
+        proj = P[:, 0].reshape(s_grp, mu)                 # line 10: Y x_sk
+        a_vals = alpha[flat].reshape(s_grp, mu)
+        # --- the s_grp dependent inner updates (Alg. 4 lines 11-20) ---
+        theta, deltas = svm_inner_loop(
+            G, proj, b_sel, a_vals, idxs, gamma=gamma_f, nu=nu_f,
+            power_iters=cfg.power_iters, use_pallas=cfg.use_pallas)
+        theta = theta.astype(cfg.dtype)
+        deltas = deltas.astype(cfg.dtype)
+        bt = (b_sel * theta).reshape(s_grp * mu)
+        alpha = alpha.at[flat].add(theta.reshape(s_grp * mu))  # line 20
         # Deferred primal update (local GEMV): x += Y^T (theta * b_sel).
-        x = x + Y.T @ bt_buf.reshape(s * mu)              # line 21, batched
-        objs = duals if cfg.track_objective \
-            else jnp.zeros((s,), cfg.dtype)
+        x = x + Y.T @ bt                                  # line 21, batched
+        objs = dual + jnp.cumsum(deltas) if cfg.track_objective \
+            else jnp.zeros((s_grp,), cfg.dtype)
+        dual = dual + jnp.sum(deltas)
         return (alpha, x, dual), objs
 
     dual0 = jnp.asarray(0.0, cfg.dtype)
-    (alpha, x, dual), objs = jax.lax.scan(
-        outer, (alpha, x, dual0), jnp.arange(K))
-    return SolverResult(x=x, objective=objs.reshape(H),
-                        aux={"alpha": alpha, "dual": dual})
+    (alpha, x, dual), objs = run_grouped(group, (alpha, x, dual0), H, s,
+                                         cfg.dtype)
+    return SolverResult(x=x, objective=objs,
+                        aux={"alpha": alpha, "dual": dual,
+                             "inner_impl": grouped_impl_label(
+                                 inner_impl, H, s, mu, cfg.use_pallas)})
 
 
 def sa_svm(problem: SVMProblem, cfg: SolverConfig,

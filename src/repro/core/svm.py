@@ -111,7 +111,10 @@ def bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
         G = red[:, :mu] + gamma * eye_mu                 # line 7 (block)
         a_B = alpha[idx]
         g = b_B * red[:, mu] - 1.0 + gamma * a_B         # line 8 (block)
-        v = linalg.power_iteration_max_eig(G, cfg.power_iters)
+        # mu = 1: the (1, 1) Gram "block" IS the eigenvalue (paper
+        # Alg. 3's eta = ||a_i||^2 + gamma) — skip the power loop.
+        v = G[0, 0] if mu == 1 \
+            else linalg.power_iteration_max_eig(G, cfg.power_iters)
         gbar = jnp.abs(jnp.clip(a_B - g, 0.0, nu) - a_B)             # line 9
         theta = jnp.where(
             gbar != 0.0,
@@ -141,6 +144,17 @@ def dcd_svm(problem: SVMProblem, cfg: SolverConfig,
 
 def solve_svm(problem: SVMProblem, cfg: SolverConfig,
               axis_name: Optional[object] = None) -> SolverResult:
+    """Dispatch on (problem.kernel, cfg.s).
+
+    Linear problems keep the primal-shadowing (SA-)BDCD solvers with
+    their O(s^2 mu^2) reduced message; nonlinear kernels route to the
+    kernelized (SA-)K-BDCD solvers of ``repro.core.kernel_svm``
+    (``kernel="linear"`` there reproduces the same iterates — the
+    dispatch is a communication-cost choice, not an algorithmic one).
+    """
+    if getattr(problem, "kernel", "linear") != "linear":
+        from repro.core.kernel_svm import solve_ksvm
+        return solve_ksvm(problem, cfg, axis_name)
     if cfg.s > 1:
         from repro.core.sa_svm import sa_bdcd_svm
         return sa_bdcd_svm(problem, cfg, axis_name)

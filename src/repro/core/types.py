@@ -13,9 +13,69 @@ the synchronization-avoiding (SA) s-step reformulation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Kernel registry (kernel SVM, after Shao & Devarakonda, arXiv:2406.18001).
+#
+# A kernel function maps the *reduced* (post-Allreduce) linear cross-product
+# block  C[i, j] = u_i . v_j  — plus the squared row norms when it needs
+# them — to the kernel block  K[i, j] = k(u_i, v_j),  as a pure pointwise
+# transform. Keeping kernels downstream of the reduction means swapping
+# Y Y^T for K(Y, Y) changes NO communication: the solvers still do ONE
+# fused Allreduce per (outer) iteration and kernelize the replicated copy.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """A registered SVM kernel.
+
+    fn(cross, unorms, vnorms, params) -> K, all element-wise on the reduced
+    cross-product block ``cross`` (p, q); ``unorms`` (p,) / ``vnorms`` (q,)
+    are the squared row norms (only materialized when ``needs_norms``).
+    """
+
+    name: str
+    fn: Callable
+    needs_norms: bool = False
+
+
+KERNELS: Dict[str, KernelSpec] = {}
+
+
+def register_kernel(name: str, needs_norms: bool = False):
+    """Decorator: add a kernel to the registry (``KERNELS[name]``)."""
+
+    def deco(fn):
+        KERNELS[name] = KernelSpec(name=name, fn=fn, needs_norms=needs_norms)
+        return fn
+
+    return deco
+
+
+@register_kernel("linear")
+def _linear_kernel(cross, unorms, vnorms, params):
+    return cross
+
+
+@register_kernel("poly")
+def _poly_kernel(cross, unorms, vnorms, params):
+    p = params or {}
+    scale = p.get("scale", 1.0)
+    coef0 = p.get("coef0", 1.0)
+    degree = p.get("degree", 3)
+    return (scale * cross + coef0) ** degree
+
+
+@register_kernel("rbf", needs_norms=True)
+def _rbf_kernel(cross, unorms, vnorms, params):
+    p = params or {}
+    width = p.get("gamma", 0.1)
+    sq = unorms[:, None] + vnorms[None, :] - 2.0 * cross
+    return jnp.exp(-width * jnp.maximum(sq, 0.0))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,12 +112,31 @@ class SVMProblem:
     b: (m,) binary labels in {-1, +1} (replicated when distributed).
     lam: SVM penalty parameter (paper: lam = 1).
     loss: "l1" (hinge) or "l2" (squared hinge).
+    kernel: name in ``KERNELS`` ("linear", "rbf", "poly"). "linear" routes
+       to the primal-shadowing (B)DCD solvers of ``core.svm`` /
+       ``core.sa_svm``; anything else routes to the kernelized K-BDCD /
+       SA-K-BDCD solvers of ``core.kernel_svm``.
+    kernel_params: optional dict of kernel hyperparameters (e.g.
+       ``{"gamma": 0.1}`` for rbf, ``{"degree": 3, "coef0": 1.0}`` for
+       poly); see the registry functions in this module.
     """
 
     A: Any
     b: Any
     lam: float = 1.0
     loss: str = "l1"
+    kernel: str = "linear"
+    kernel_params: Optional[Dict[str, Any]] = None
+
+    def __post_init__(self):
+        if self.kernel not in KERNELS:
+            raise ValueError(
+                f"unknown kernel {self.kernel!r}; registered: "
+                f"{sorted(KERNELS)}")
+
+    @property
+    def kernel_spec(self) -> KernelSpec:
+        return KERNELS[self.kernel]
 
     @property
     def gamma(self) -> float:
@@ -80,8 +159,10 @@ class SolverConfig:
     s: recurrence-unrolling parameter. s=1 recovers the classical method
        (one Allreduce per iteration); s>1 defers communication for s
        iterations (one Allreduce per outer iteration, paper Alg. 2 / 4).
-    iterations: H, the total number of *inner* iterations. Must be a
-       multiple of s.
+    iterations: H, the total number of *inner* iterations. Need not be a
+       multiple of s: the SA solvers run floor(H/s) full s-step groups
+       followed by one remainder group of H mod s iterations, so every
+       configuration executes exactly H inner iterations.
     accelerated: use the Nesterov-accelerated variant (accCD / accBCD).
     power_iters: fixed iteration count for the power method computing the
        largest eigenvalue of the mu x mu Gram block (TPU-friendly
@@ -115,16 +196,15 @@ class SolverConfig:
     dtype: Any = jnp.float32
 
     def __post_init__(self):
-        if self.iterations % max(self.s, 1) != 0:
-            raise ValueError(
-                f"iterations ({self.iterations}) must be a multiple of s ({self.s})"
-            )
         if self.s < 1 or self.block_size < 1:
             raise ValueError("s and block_size must be >= 1")
+        if self.iterations < 1:
+            raise ValueError("iterations must be >= 1")
 
     @property
     def outer_iterations(self) -> int:
-        return self.iterations // self.s
+        """Allreduce rounds: full s-groups plus the remainder group."""
+        return -(-self.iterations // self.s)
 
 
 @dataclasses.dataclass

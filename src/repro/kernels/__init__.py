@@ -7,6 +7,7 @@ Each kernel subpackage follows the repo convention:
 
 Kernels:
     gram            — fused Gram + projection  Y^T [Y | V]  (paper hot spot)
-    sa_inner        — the s-step SA inner loop, entirely in VMEM
+    sa_inner        — the Lasso s-step SA inner loop, entirely in VMEM
+    svm_inner       — the SVM s-step SA inner loop (linear + kernel blocks)
     flash_attention — blocked causal/sliding-window GQA attention
 """

@@ -1,0 +1,22 @@
+"""In-kernel helpers shared by the fused inner-loop Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def power_iter_max_eig(Gjj, iters: int):
+    """Largest eigenvalue of a (mu, mu) PSD block via fixed-count power
+    iteration, row-vector form (TPU-friendly shapes). Runs inside a
+    Pallas kernel body."""
+    mu = Gjj.shape[0]
+    v = jnp.full((1, mu), 1.0 / jnp.sqrt(jnp.float32(mu)), jnp.float32)
+
+    def body(_, v):
+        w = jnp.dot(v, Gjj, preferred_element_type=jnp.float32)
+        nrm = jnp.sqrt(jnp.sum(w * w))
+        return w / jnp.maximum(nrm, 1e-30)
+
+    v = jax.lax.fori_loop(0, iters, body, v)
+    return jnp.sum(jnp.dot(v, Gjj, preferred_element_type=jnp.float32) * v) \
+        / jnp.maximum(jnp.sum(v * v), 1e-30)

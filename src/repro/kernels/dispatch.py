@@ -1,0 +1,40 @@
+"""Shared Pallas-vs-ref dispatch policy for the fused inner-loop kernels
+(``sa_inner`` for Lasso, ``svm_inner`` for SVM/K-SVM).
+
+Both kernels hold the (s*mu, s*mu) replicated Gram/kernel block resident
+in VMEM, so they share one budget: reject configurations whose G would
+not leave room (~16 MB on v5e; we cap the resident G at half of it).
+The chosen implementation is an explicit, queryable decision that warns
+ONCE per (kernel, s, mu) when a requested Pallas route has to fall back
+— the SA solvers surface it in ``SolverResult.aux["inner_impl"]`` so
+benchmarks never mislabel ref timings as Pallas.
+"""
+from __future__ import annotations
+
+import warnings
+
+_VMEM_G_BYTES_CAP = 8 * 1024 * 1024
+
+_warned = set()
+
+
+def vmem_ok(s: int, mu: int) -> bool:
+    return (s * mu) ** 2 * 4 <= _VMEM_G_BYTES_CAP
+
+
+def choose_inner_impl(name: str, s: int, mu: int,
+                      use_pallas: bool) -> str:
+    """"pallas" or "ref", warning once per (name, s, mu) on a forced
+    Pallas -> ref fallback."""
+    if not use_pallas:
+        return "ref"
+    if vmem_ok(s, mu):
+        return "pallas"
+    if (name, s, mu) not in _warned:
+        _warned.add((name, s, mu))
+        warnings.warn(
+            f"{name}: use_pallas=True but (s*mu)^2 Gram "
+            f"({(s * mu) ** 2 * 4} B) exceeds the VMEM cap "
+            f"({_VMEM_G_BYTES_CAP} B) for s={s}, mu={mu}; "
+            f"falling back to the jnp reference path", stacklevel=3)
+    return "ref"

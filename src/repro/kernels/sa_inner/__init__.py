@@ -1,1 +1,4 @@
-from repro.kernels.sa_inner.ops import sa_inner_loop
+from repro.kernels.sa_inner.ops import (inner_impl, sa_inner_loop,
+                                        vmem_ok)
+
+__all__ = ["inner_impl", "sa_inner_loop", "vmem_ok"]

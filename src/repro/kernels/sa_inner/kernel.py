@@ -24,21 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-
-def _power_iter_max_eig(Gjj, iters: int):
-    """Largest eigenvalue of (mu, mu) PSD block via fixed-count power
-    iteration, row-vector form (TPU-friendly shapes)."""
-    mu = Gjj.shape[0]
-    v = jnp.full((1, mu), 1.0 / jnp.sqrt(jnp.float32(mu)), jnp.float32)
-
-    def body(_, v):
-        w = jnp.dot(v, Gjj, preferred_element_type=jnp.float32)
-        nrm = jnp.sqrt(jnp.sum(w * w))
-        return w / jnp.maximum(nrm, 1e-30)
-
-    v = jax.lax.fori_loop(0, iters, body, v)
-    return jnp.sum(jnp.dot(v, Gjj, preferred_element_type=jnp.float32) * v) \
-        / jnp.maximum(jnp.sum(v * v), 1e-30)
+from repro.kernels.common import power_iter_max_eig
 
 
 def _make_kernel(s: int, mu: int, q: float, lam1: float, lam2: float,
@@ -70,7 +56,9 @@ def _make_kernel(s: int, mu: int, q: float, lam1: float, lam2: float,
 
             Gjj = pl.load(G_ref, (pl.dslice(j * mu, mu),
                                   pl.dslice(j * mu, mu)))
-            vmax = _power_iter_max_eig(Gjj, power_iters)
+            # mu = 1: the diagonal "block" is the eigenvalue itself.
+            vmax = Gjj[0, 0] if mu == 1 \
+                else power_iter_max_eig(Gjj, power_iters)
             eta = 1.0 / (q * thp * vmax)
 
             # collision-corrected z at this block's coordinates.

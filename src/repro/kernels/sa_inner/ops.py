@@ -1,21 +1,24 @@
-"""Public wrapper for the fused SA inner loop."""
+"""Public wrapper for the fused SA inner loop.
+
+Dispatch policy lives in ``repro.kernels.dispatch`` (shared with
+``svm_inner``): ``inner_impl(s, mu, use_pallas)`` returns the path that
+will actually run, warning once per (s, mu) about a forced Pallas -> ref
+fallback, so benchmarks never mislabel ref timings as Pallas.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels import dispatch
+from repro.kernels.dispatch import vmem_ok
 from repro.kernels.sa_inner import ref as _ref
 from repro.kernels.sa_inner.kernel import sa_inner_pallas
 
-# Reject configurations whose Gram matrix would not leave room in VMEM
-# (~16 MB on v5e; we cap the resident G at half of it).
-_VMEM_G_BYTES_CAP = 8 * 1024 * 1024
 
-
-def vmem_ok(s: int, mu: int) -> bool:
-    return (s * mu) ** 2 * 4 <= _VMEM_G_BYTES_CAP
+def inner_impl(s: int, mu: int, use_pallas: bool) -> str:
+    return dispatch.choose_inner_impl("sa_inner", s, mu, use_pallas)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -26,7 +29,7 @@ def sa_inner_loop(G, y_proj, z_proj, z_vals, idx, th_prev, coefU,
                   use_pallas: bool = False, interpret: bool = False):
     """Dispatch the s-step SA inner loop (see ref.py for semantics)."""
     s, mu = y_proj.shape
-    if (use_pallas or interpret) and vmem_ok(s, mu):
+    if inner_impl(s, mu, use_pallas or interpret) == "pallas":
         return sa_inner_pallas(
             G, y_proj, z_proj, z_vals, idx, th_prev, coefU,
             q=q, lam1=lam1, lam2=lam2, power_iters=power_iters,

@@ -1,0 +1,3 @@
+from repro.kernels.svm_inner.ops import inner_impl, svm_inner_loop, vmem_ok
+
+__all__ = ["inner_impl", "svm_inner_loop", "vmem_ok"]

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: the SVM s-step inner loop, entirely in VMEM.
+
+Same TPU rethinking as ``repro.kernels.sa_inner``: the paper's
+"redundantly execute the s inner iterations on every processor"
+(Sec. III) becomes ONE kernel launch holding all replicated
+O((s*mu)^2) state — the regularized block matrix G (linear Gram or
+kernel block), the projections, labels, gathered duals and the growing
+theta history — in VMEM, with zero intermediate HBM round-trips. Per
+step: the t<j cross-term GEMV against G's off-diagonal blocks, the
+power-iteration step size on the diagonal block (skipped for mu = 1,
+where the (1, 1) block IS the eigenvalue), and the clipped dual update.
+
+VMEM budget: the dominant resident is G at (s*mu)^2 * 4 bytes; ops.py
+rejects configurations above ~8 MB (half of v5e's ~16 MB VMEM).
+
+Single grid point — the loop is inherently sequential; these flops are
+the SA trade's latency-free replicated work.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import power_iter_max_eig
+
+
+def _make_kernel(s: int, mu: int, gamma: float, nu: float,
+                 power_iters: int):
+    smu = s * mu
+    finite_nu = nu == nu and nu != float("inf")
+
+    def _clip(x):
+        lo = jnp.maximum(x, 0.0)
+        return jnp.minimum(lo, nu) if finite_nu else lo
+
+    def kernel(G_ref, proj_ref, b_ref, avals_ref, idx_ref,
+               theta_ref, dual_ref):
+        theta_ref[...] = jnp.zeros_like(theta_ref)
+        dual_ref[...] = jnp.zeros_like(dual_ref)
+        idx_flat = idx_ref[...].reshape(1, smu)
+
+        def body(j, _):
+            b_j = b_ref[j, :]
+            Gj = pl.load(G_ref, (pl.dslice(j * mu, mu), slice(None)))
+            # (mu, s*mu)
+
+            th_flat = theta_ref[...].reshape(1, smu)
+            bt_flat = b_ref[...].reshape(1, smu) * th_flat
+            t_ids = jax.lax.broadcasted_iota(jnp.int32, (s, mu), 0)
+            mask = (t_ids < j).astype(jnp.float32).reshape(1, smu)
+
+            cross = jnp.dot(Gj, (mask * bt_flat).reshape(smu, 1),
+                            preferred_element_type=jnp.float32)   # (mu, 1)
+            rj = proj_ref[j, :] + cross[:, 0]
+
+            Gjj = pl.load(G_ref, (pl.dslice(j * mu, mu),
+                                  pl.dslice(j * mu, mu)))
+            # mu = 1: the diagonal "block" is the eigenvalue itself.
+            vmax = Gjj[0, 0] if mu == 1 \
+                else power_iter_max_eig(Gjj, power_iters)
+
+            # collision-corrected alpha at this block's rows.
+            idx_j = pl.load(idx_ref, (pl.dslice(j, 1), slice(None)))
+            eq = (idx_j.reshape(mu, 1) == idx_flat).astype(jnp.float32)
+            beta = avals_ref[j, :] + jnp.dot(
+                eq, (mask * th_flat).reshape(smu, 1),
+                preferred_element_type=jnp.float32)[:, 0]
+
+            g = b_j * rj - 1.0 + gamma * beta
+            gbar = jnp.abs(_clip(beta - g) - beta)
+            theta = jnp.where(gbar != 0.0, _clip(beta - g / vmax) - beta,
+                              0.0)
+
+            bt = b_j * theta
+            w = jnp.dot(bt.reshape(1, mu), Gjj,
+                        preferred_element_type=jnp.float32)        # (1, mu)
+            delta = jnp.sum(theta * g) + 0.5 * jnp.sum(w[0, :] * bt)
+
+            pl.store(theta_ref, (pl.dslice(j, 1), slice(None)),
+                     theta.reshape(1, mu))
+            pl.store(dual_ref, (pl.dslice(j, 1), slice(None)),
+                     delta.reshape(1, 1))
+            return 0
+
+        jax.lax.fori_loop(0, s, body, 0)
+
+    return kernel
+
+
+def svm_inner_pallas(G, proj, b_sel, a_vals, idx, *, gamma: float,
+                     nu: float, power_iters: int = 32,
+                     interpret: bool = False):
+    """Run the s-step SVM inner loop in one kernel launch. All inputs are
+    the replicated post-Allreduce quantities; see ref.py for shapes."""
+    s, mu = proj.shape
+    kernel = _make_kernel(s, mu, float(gamma), float(nu), power_iters)
+    theta, duals = pl.pallas_call(
+        kernel,
+        out_shape=(jax.ShapeDtypeStruct((s, mu), jnp.float32),
+                   jax.ShapeDtypeStruct((s, 1), jnp.float32)),
+        interpret=interpret,
+    )(G.astype(jnp.float32), proj.astype(jnp.float32),
+      b_sel.astype(jnp.float32), a_vals.astype(jnp.float32),
+      idx.astype(jnp.int32))
+    return theta, duals[:, 0]

@@ -1,0 +1,36 @@
+"""Public wrapper for the fused SVM inner s-loop.
+
+Dispatch policy lives in ``repro.kernels.dispatch`` (shared with
+``sa_inner``): ``inner_impl(s, mu, use_pallas)`` returns the path that
+will actually run, warning once per (s, mu) about a forced Pallas -> ref
+fallback; the SA solvers stash it in ``SolverResult.aux["inner_impl"]``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import dispatch
+from repro.kernels.dispatch import vmem_ok
+from repro.kernels.svm_inner import ref as _ref
+from repro.kernels.svm_inner.kernel import svm_inner_pallas
+
+
+def inner_impl(s: int, mu: int, use_pallas: bool) -> str:
+    return dispatch.choose_inner_impl("svm_inner", s, mu, use_pallas)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "gamma", "nu", "power_iters", "use_pallas", "interpret"))
+def svm_inner_loop(G, proj, b_sel, a_vals, idx, gamma: float, nu: float,
+                   power_iters: int = 32, use_pallas: bool = False,
+                   interpret: bool = False):
+    """Dispatch the s-step SVM inner loop (see ref.py for semantics)."""
+    s, mu = proj.shape
+    if inner_impl(s, mu, use_pallas or interpret) == "pallas":
+        return svm_inner_pallas(G, proj, b_sel, a_vals, idx, gamma=gamma,
+                                nu=nu, power_iters=power_iters,
+                                interpret=interpret)
+    return _ref.svm_inner_ref(G, proj, b_sel, a_vals, idx, gamma, nu,
+                              power_iters)

@@ -1,0 +1,80 @@
+"""Pure-jnp oracle for the SVM s-step inner loop (paper Alg. 4 lines
+11-20, generalized to blocks and to kernel blocks).
+
+Given the replicated outputs of the single Allreduce — the regularized
+(s*mu, s*mu) block matrix G (Y Y^T + gamma*I for the linear solver,
+K(Y, Y) + gamma*I for the kernel solver), the projections
+proj = Y x_sk (linear) or f_sk[idx] (kernel), the labels / dual values
+gathered at the start of the group and the sampled indices — run the s
+dependent block updates and return the dual steps. This mirrors exactly
+what repro.core.sa_svm / repro.core.kernel_svm used to inline in their
+inner scans; the Pallas version (kernel.py) keeps all of it in VMEM.
+
+Collisions: a row index repeating across the s blocks of a group is
+corrected with the eq-matrix gather (alpha_j = a_vals[j] + sum over
+earlier colliding steps), and the off-diagonal blocks of G carry the raw
+cross terms even at repeated indices — together algebraically identical
+to the classical method (DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def svm_inner_ref(G, proj, b_sel, a_vals, idx, gamma: float, nu: float,
+                  power_iters: int = 32):
+    """Reference s-step SVM inner loop.
+
+    G:      (s*mu, s*mu) replicated block matrix, gamma already on the
+            global diagonal (diagonal blocks only — the t<j cross-term
+            mask never touches them)
+    proj:   (s, mu)  Y_j x_sk (linear) / f_sk at block j's rows (kernel)
+    b_sel:  (s, mu)  labels at the sampled rows
+    a_vals: (s, mu)  alpha_sk gathered at each block's rows (group start)
+    idx:    (s, mu)  sampled row ids (for collision corrections)
+    Returns (theta (s, mu), dual_deltas (s,)) with dual_deltas[j] the
+    j-th step's dual-objective increment
+        theta^T g + 1/2 (b theta)^T G_jj (b theta).
+    """
+    # deferred import: repro.core.sa_svm imports this package, so a
+    # module-level core import would close a cycle when this subpackage
+    # is the entry point.
+    from repro.core.linalg import power_iteration_max_eig
+
+    s, mu = proj.shape
+    dt = G.dtype
+    G4 = G.reshape(s, mu, s, mu)
+    idx_flat = idx.reshape(s * mu)
+    nu = jnp.asarray(nu, dt)
+
+    def body(carry, j):
+        th_buf = carry                                  # (s, mu) raw theta
+        b_j = b_sel[j]
+        Gj = G4[j]                                      # (mu, s, mu)
+        mask = (jnp.arange(s) < j).astype(dt)
+        bt_buf = b_sel * th_buf
+        cross = jnp.einsum("ptq,tq->tp", Gj, bt_buf)    # (s, mu)
+        rj = proj[j] + jnp.einsum("t,tp->p", mask, cross)
+        # collision-corrected alpha at this block's rows.
+        eq = (idx[j][:, None] == idx_flat[None, :]).astype(dt)
+        beta = a_vals[j] + eq @ (mask[:, None] * th_buf).reshape(s * mu)
+        g = b_j * rj - 1.0 + gamma * beta
+        Gjj = Gj[:, j, :]                               # (mu, mu) diag block
+        # mu = 1: the (1, 1) diagonal block IS the eigenvalue (paper
+        # Alg. 4's eta) — skip the power loop entirely.
+        v = Gjj[0, 0] if mu == 1 \
+            else power_iteration_max_eig(Gjj, power_iters)
+        gbar = jnp.abs(jnp.clip(beta - g, 0.0, nu) - beta)
+        theta = jnp.where(
+            gbar != 0.0,
+            jnp.clip(beta - g / v, 0.0, nu) - beta,
+            0.0)
+        bt = b_j * theta
+        delta = jnp.sum(theta * g) + 0.5 * bt @ (Gjj @ bt)
+        th_buf = th_buf.at[j].set(theta)
+        return th_buf, delta
+
+    th_buf, deltas = jax.lax.scan(
+        body, jnp.zeros((s, mu), dt), jnp.arange(s))
+    return th_buf, deltas

@@ -27,6 +27,14 @@ def main():
     ap.add_argument("--accelerated", action="store_true")
     ap.add_argument("--lam-frac", type=float, default=0.1)
     ap.add_argument("--svm-loss", choices=("l1", "l2"), default="l1")
+    # kernel SVM (SA-K-BDCD): anything but "linear" routes through
+    # repro.core.kernel_svm with the registered kernel block.
+    ap.add_argument("--kernel", choices=("linear", "rbf", "poly"),
+                    default="linear")
+    ap.add_argument("--kernel-gamma", type=float, default=0.1,
+                    help="rbf width parameter")
+    ap.add_argument("--kernel-degree", type=int, default=3,
+                    help="poly degree")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.mu is None:
@@ -47,10 +55,16 @@ def main():
               f"{time.perf_counter() - t0:.2f}s")
     else:
         A, b = make_svm_dataset(args.dataset, args.seed)
-        prob = SVMProblem(A=A, b=b, lam=1.0, loss=args.svm_loss)
+        kernel_params = {"gamma": args.kernel_gamma} \
+            if args.kernel == "rbf" else \
+            {"degree": args.kernel_degree} if args.kernel == "poly" \
+            else None
+        prob = SVMProblem(A=A, b=b, lam=1.0, loss=args.svm_loss,
+                          kernel=args.kernel, kernel_params=kernel_params)
         res = solve_svm(prob, cfg)
         obj = np.asarray(res.objective)
-        print(f"svm-{args.svm_loss} {args.dataset} s={args.s} mu={args.mu}: "
+        print(f"svm-{args.svm_loss}[{args.kernel}] {args.dataset} "
+              f"s={args.s} mu={args.mu}: "
               f"dual {obj[0]:.5f} -> {obj[-1]:.5f}, "
               f"{time.perf_counter() - t0:.2f}s")
 

@@ -67,6 +67,22 @@ def test_svm_latency_model():
     assert c8["W"] == pytest.approx(8 * c1["W"])
 
 
+def test_kernel_svm_costs():
+    """The kernelized solver still amortizes latency by s, but moves the
+    (m, s*mu) cross block (W independent of s per inner iteration, >>
+    the linear s*mu^2 message) and pays the kernel-evaluation flops."""
+    lin = svm_costs(DIMS, H=512, s=8, P=128, mu=4)
+    rbf = svm_costs(DIMS, H=512, s=8, P=128, mu=4, kernel="rbf")
+    rbf1 = svm_costs(DIMS, H=512, s=1, P=128, mu=4, kernel="rbf")
+    assert rbf["L"] == pytest.approx(rbf1["L"] / 8)   # SA latency win
+    assert rbf["W"] == pytest.approx(rbf1["W"])       # bandwidth flat in s
+    assert rbf["W"] > lin["W"]                        # m-row cross block
+    assert rbf["F"] > svm_costs(DIMS, H=512, s=8, P=128, mu=4,
+                                kernel="poly")["F"] > lin["F"]
+    assert svm_speedup(DIMS, 100, 1, 64, Machine.cray_xc30(),
+                       kernel="rbf") == pytest.approx(1.0)
+
+
 def test_predicted_time_positive_and_additive():
     m = Machine.tpu_v5e_pod()
     c = lasso_costs(DIMS, H=256, mu=8, s=4, P=256)

@@ -1,0 +1,237 @@
+"""Kernel SVM subsystem (K-BDCD / SA-K-BDCD, arXiv:2406.18001).
+
+The kernelized solvers must (a) reproduce the linear (B)DCD iterates
+exactly when kernel="linear", (b) keep the paper's central SA claim —
+SA-K-BDCD == K-BDCD iterate-for-iterate — across the s x mu x kernel
+sweep including forced index collisions and remainder iterations, and
+(c) track the dual objective exactly against the direct m x m quadratic
+form.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (KERNELS, SVMProblem, SolverConfig, bdcd_svm,
+                        kbdcd_svm, kernel_dual_objective, sa_bdcd_svm,
+                        sa_kbdcd_svm, solve_svm)
+
+KERNEL_GRID = [("linear", None),
+               ("rbf", {"gamma": 0.05}),
+               ("poly", {"degree": 2, "coef0": 1.0, "scale": 0.1})]
+
+
+def _kprob(svm_data, kern, params, loss="l2"):
+    A, b = svm_data
+    return SVMProblem(A=A, b=b, lam=1.0, loss=loss, kernel=kern,
+                      kernel_params=params)
+
+
+def test_kernel_registry():
+    assert {"linear", "rbf", "poly"} <= set(KERNELS)
+    assert KERNELS["rbf"].needs_norms
+    assert not KERNELS["linear"].needs_norms
+    with pytest.raises(ValueError, match="unknown kernel"):
+        SVMProblem(A=np.zeros((2, 2)), b=np.ones(2), kernel="sigmoid")
+
+
+@pytest.mark.parametrize("loss", ["l1", "l2"])
+@pytest.mark.parametrize("mu", [1, 4])
+def test_kbdcd_linear_matches_bdcd(svm_data, loss, mu):
+    """kernel="linear" K-BDCD reproduces BDCD iterates: the maintained
+    dual residual f equals Y x by definition."""
+    A, b = svm_data
+    prob = SVMProblem(A=A, b=b, lam=1.0, loss=loss)
+    cfg = SolverConfig(block_size=mu, iterations=48)
+    base = bdcd_svm(prob, cfg)
+    kern = kbdcd_svm(prob, cfg)
+    np.testing.assert_allclose(np.asarray(kern.objective),
+                               np.asarray(base.objective),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(kern.aux["alpha"]),
+                               np.asarray(base.aux["alpha"]), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(kern.x), np.asarray(base.x),
+                               atol=1e-3)
+
+
+_KBDCD_BASE_CACHE = {}
+
+
+def _kbdcd_base(svm_data, kern, params, mu, H):
+    key = (kern, mu, H)
+    if key not in _KBDCD_BASE_CACHE:
+        prob = _kprob(svm_data, kern, params)
+        _KBDCD_BASE_CACHE[key] = kbdcd_svm(
+            prob, SolverConfig(block_size=mu, iterations=H))
+    return _KBDCD_BASE_CACHE[key]
+
+
+@pytest.mark.parametrize("kern,params", KERNEL_GRID)
+@pytest.mark.parametrize("mu", [1, 2, 4])
+@pytest.mark.parametrize("s", [1, 4, 8])
+def test_sa_kbdcd_trajectory_matches(svm_data, kern, params, mu, s):
+    """SA-K-BDCD == K-BDCD across the full s x mu x kernel sweep."""
+    prob = _kprob(svm_data, kern, params)
+    H = 32
+    base = _kbdcd_base(svm_data, kern, params, mu, H)
+    sa = sa_kbdcd_svm(prob, SolverConfig(block_size=mu, iterations=H, s=s))
+    o1, o2 = np.asarray(base.objective), np.asarray(sa.objective)
+    assert o1.shape == o2.shape == (H,)
+    np.testing.assert_allclose(o2, o1, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sa.aux["alpha"]),
+                               np.asarray(base.aux["alpha"]), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sa.aux["f"]),
+                               np.asarray(base.aux["f"]), atol=1e-3)
+    assert o1[-1] < o1[0]          # dual objective decreases
+    assert sa.aux["inner_impl"] == "ref"   # CPU: no pallas requested
+
+
+@pytest.mark.parametrize("kern,params", KERNEL_GRID[1:])
+def test_sa_kbdcd_collisions_within_group(kern, params):
+    """Tiny m forces the same row index to repeat across the s blocks of
+    one outer group (s*mu > m) — the kernel cross terms hold the raw
+    k(a_i, a_i) at colliding positions, keeping SA-K-BDCD exact."""
+    rng = np.random.default_rng(3)
+    m, n = 10, 24
+    A = rng.standard_normal((m, n)).astype(np.float32)
+    b = np.sign(rng.standard_normal(m)).astype(np.float32)
+    b[b == 0] = 1.0
+    prob = SVMProblem(A=A, b=b, lam=1.0, loss="l2", kernel=kern,
+                      kernel_params=params)
+    s, mu, H = 8, 2, 16
+    base = kbdcd_svm(prob, SolverConfig(block_size=mu, iterations=H))
+    sa = sa_kbdcd_svm(prob, SolverConfig(block_size=mu, iterations=H, s=s))
+    np.testing.assert_allclose(np.asarray(sa.objective),
+                               np.asarray(base.objective),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sa.aux["alpha"]),
+                               np.asarray(base.aux["alpha"]), atol=1e-4)
+
+
+@pytest.mark.parametrize("kern,params", KERNEL_GRID)
+def test_kernel_incremental_dual_tracking_exact(svm_data, kern, params):
+    """The per-iteration tracked dual (local scalars only) must equal the
+    direct m x m quadratic-form evaluation, for both hinge losses."""
+    for loss in ("l1", "l2"):
+        prob = _kprob(svm_data, kern, params, loss=loss)
+        res = kbdcd_svm(prob, SolverConfig(block_size=4, iterations=64))
+        tracked = float(res.objective[-1])
+        direct = float(kernel_dual_objective(prob, res.aux["alpha"]))
+        assert abs(tracked - direct) < 1e-3 * max(1.0, abs(direct))
+
+
+def test_kernel_alpha_box_constraints(svm_data):
+    prob = _kprob(svm_data, "rbf", {"gamma": 0.05}, loss="l1")
+    for solve in (lambda c: kbdcd_svm(prob, c),
+                  lambda c: sa_kbdcd_svm(prob,
+                                         dataclasses.replace(c, s=8))):
+        res = solve(SolverConfig(block_size=4, iterations=96))
+        alpha = np.asarray(res.aux["alpha"])
+        assert np.all(alpha >= -1e-6)
+        assert np.all(alpha <= prob.lam + 1e-6)   # nu = lam for L1
+        assert np.any(alpha > 1e-4)               # nontrivial solution
+
+
+def test_solve_svm_dispatches_on_kernel(svm_data):
+    """solve_svm routes nonlinear kernels to the K-BDCD solvers (whose
+    results carry the dual residual f) and linear ones to BDCD."""
+    prob = _kprob(svm_data, "rbf", {"gamma": 0.05})
+    res = solve_svm(prob, SolverConfig(block_size=2, iterations=16, s=4))
+    assert "f" in res.aux and "inner_impl" in res.aux
+    lin = solve_svm(SVMProblem(A=prob.A, b=prob.b, lam=1.0, loss="l2"),
+                    SolverConfig(block_size=2, iterations=16))
+    assert "f" not in lin.aux
+
+
+# ---------------------------------------------------------------------------
+# Remainder iterations (iterations % s != 0) — regression for the
+# objs.reshape(H) crash: every SA solver must run the H mod s tail group.
+# ---------------------------------------------------------------------------
+
+def test_sa_bdcd_svm_remainder_iterations(svm_data):
+    A, b = svm_data
+    prob = SVMProblem(A=A, b=b, lam=1.0, loss="l1")
+    H, s = 10, 4
+    base = bdcd_svm(prob, SolverConfig(block_size=2, iterations=H))
+    cfg = SolverConfig(block_size=2, iterations=H, s=s)
+    assert cfg.outer_iterations == 3        # 2 full groups + tail of 2
+    sa = sa_bdcd_svm(prob, cfg)
+    o1, o2 = np.asarray(base.objective), np.asarray(sa.objective)
+    assert o2.shape == (H,)
+    np.testing.assert_allclose(o2, o1, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sa.aux["alpha"]),
+                               np.asarray(base.aux["alpha"]), atol=1e-4)
+
+
+def test_sa_kbdcd_svm_remainder_iterations(svm_data):
+    prob = _kprob(svm_data, "rbf", {"gamma": 0.05})
+    H, s = 10, 4
+    base = kbdcd_svm(prob, SolverConfig(block_size=2, iterations=H))
+    sa = sa_kbdcd_svm(prob, SolverConfig(block_size=2, iterations=H, s=s))
+    o1, o2 = np.asarray(base.objective), np.asarray(sa.objective)
+    assert o2.shape == (H,)
+    np.testing.assert_allclose(o2, o1, rtol=1e-4, atol=1e-4)
+
+
+def test_sa_svm_shorter_than_one_group(svm_data):
+    """H < s: zero full groups, everything in the tail."""
+    A, b = svm_data
+    prob = SVMProblem(A=A, b=b, lam=1.0, loss="l2")
+    H, s = 3, 8
+    base = bdcd_svm(prob, SolverConfig(block_size=1, iterations=H))
+    sa = sa_bdcd_svm(prob, SolverConfig(block_size=1, iterations=H, s=s))
+    np.testing.assert_allclose(np.asarray(sa.objective),
+                               np.asarray(base.objective),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.slow
+def test_sa_kbdcd_final_error_f64():
+    """SA-K-BDCD == K-BDCD at machine-epsilon scale in f64 across the
+    s x mu x kernel sweep including forced collisions (acceptance bound
+    1e-10; f64 needs a subprocess, see DESIGN.md test conventions)."""
+    code = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from repro.core import SVMProblem, SolverConfig, kbdcd_svm, sa_kbdcd_svm
+worst = 0.0
+for m, n in ((96, 40), (10, 24)):       # the second forces collisions
+    rng = np.random.default_rng(7)
+    A = rng.standard_normal((m, n))
+    w = rng.standard_normal(n)
+    b = np.sign(A @ w + 0.1 * rng.standard_normal(m)); b[b == 0] = 1.0
+    for kern, params in (("linear", None), ("rbf", {"gamma": 0.05}),
+                         ("poly", {"degree": 2, "coef0": 1.0,
+                                   "scale": 0.1})):
+        for loss in ("l1", "l2"):
+            prob = SVMProblem(A=A, b=b, lam=1.0, loss=loss, kernel=kern,
+                              kernel_params=params)
+            for mu, s in ((1, 8), (4, 8), (2, 6)):
+                base = kbdcd_svm(prob, SolverConfig(
+                    block_size=mu, iterations=60, dtype=jnp.float64))
+                sa = sa_kbdcd_svm(prob, SolverConfig(
+                    block_size=mu, iterations=60, s=s,
+                    dtype=jnp.float64))
+                o1 = np.asarray(base.objective)
+                o2 = np.asarray(sa.objective)
+                dev = float(np.max(np.abs(o1 - o2)
+                                   / np.maximum(np.abs(o1), 1e-30)))
+                adev = float(np.max(np.abs(
+                    np.asarray(base.aux["alpha"])
+                    - np.asarray(sa.aux["alpha"]))))
+                worst = max(worst, dev, adev)
+print("DEV", worst)
+assert worst < 1e-10, worst
+"""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    dev = float(out.stdout.split("DEV")[1].strip())
+    assert dev < 1e-10

@@ -12,6 +12,9 @@ from repro.kernels.gram.ops import gram_and_proj, gram_t
 from repro.kernels.gram.ref import gram_and_proj_ref, gram_t_ref
 from repro.kernels.sa_inner.ops import sa_inner_loop
 from repro.kernels.sa_inner.ref import sa_inner_ref
+from repro.kernels import sa_inner, svm_inner
+from repro.kernels.svm_inner.ops import svm_inner_loop
+from repro.kernels.svm_inner.ref import svm_inner_ref
 
 KEY = jax.random.key(0)
 
@@ -58,6 +61,65 @@ def test_sa_inner_kernel_sweep(s, mu):
     np.testing.assert_allclose(np.asarray(dz1), np.asarray(dz2),
                                rtol=1e-4, atol=1e-5)
     np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-4)
+
+
+@pytest.mark.parametrize("s,mu", [(4, 1), (8, 4), (16, 2), (3, 5)])
+@pytest.mark.parametrize("nu", [1.0, float("inf")])
+def test_svm_inner_kernel_sweep(s, mu, nu):
+    """svm_inner Pallas (interpret) vs jnp oracle, hinge (finite nu) and
+    squared hinge (nu = inf), with colliding indices."""
+    m = 12                                  # small -> forced collisions
+    G0 = jax.random.normal(KEY, (64, s * mu))
+    G = G0.T @ G0 + 0.5 * jnp.eye(s * mu)
+    proj = jax.random.normal(jax.random.fold_in(KEY, 3), (s, mu))
+    b = jnp.sign(jax.random.normal(jax.random.fold_in(KEY, 4), (s, mu)))
+    b = jnp.where(b == 0, 1.0, b)
+    a_vals = 0.2 * jax.random.uniform(jax.random.fold_in(KEY, 5), (s, mu))
+    idx = jax.random.randint(jax.random.fold_in(KEY, 6), (s, mu), 0, m)
+    t1, d1 = svm_inner_loop(G, proj, b, a_vals, idx, gamma=0.3, nu=nu,
+                            interpret=True)
+    t2, d2 = svm_inner_ref(G, proj, b, a_vals, idx, 0.3, nu)
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t2),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mod,name", [(sa_inner, "sa_inner"),
+                                      (svm_inner, "svm_inner")])
+def test_inner_impl_contract(mod, name):
+    """The dispatch decision is queryable, and an over-VMEM Pallas
+    request warns (once) and falls back to ref instead of silently
+    mislabeling the path."""
+    from repro.kernels import dispatch
+
+    assert mod.inner_impl(8, 4, False) == "ref"
+    assert mod.inner_impl(8, 4, True) == "pallas"
+    big_s = 4096                            # (s*mu)^2 * 4 B >> 8 MB cap
+    assert not mod.vmem_ok(big_s, 4)
+    dispatch._warned.discard((name, big_s, 4))
+    with pytest.warns(UserWarning, match="falling back"):
+        assert mod.inner_impl(big_s, 4, True) == "ref"
+    # one-time: a second query must not warn again.
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        assert mod.inner_impl(big_s, 4, True) == "ref"
+
+
+def test_grouped_impl_label_mixed():
+    """An over-VMEM s falls back to ref for the full groups while a
+    small remainder tail still runs Pallas — the surfaced label must
+    report both paths, not just the full groups'."""
+    from repro.core.sa_loop import grouped_impl_label
+    from repro.kernels.svm_inner import inner_impl
+
+    assert grouped_impl_label(inner_impl, 64, 8, 4, True) == "pallas"
+    assert grouped_impl_label(inner_impl, 64, 8, 4, False) == "ref"
+    big_s = 4096                            # over-VMEM full groups
+    assert grouped_impl_label(inner_impl, big_s + 1, big_s, 4, True) \
+        == "ref+pallas"
+    assert grouped_impl_label(inner_impl, 3, 8, 1, True) == "pallas"
 
 
 ATTN_CASES = [

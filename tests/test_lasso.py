@@ -66,6 +66,13 @@ def test_dispatch_solve_lasso(lasso_data):
             assert res.objective.shape == (32,)
 
 
-def test_iterations_must_divide_s():
+def test_iterations_need_not_divide_s():
+    """iterations % s != 0 is now a supported configuration (the SA
+    solvers run a remainder tail group): ceil-division outer count, and
+    only genuinely invalid configs raise."""
+    cfg = SolverConfig(iterations=10, s=4)
+    assert cfg.outer_iterations == 3
     with pytest.raises(ValueError):
-        SolverConfig(iterations=10, s=4)
+        SolverConfig(iterations=0)
+    with pytest.raises(ValueError):
+        SolverConfig(s=0)

@@ -131,6 +131,39 @@ def test_svm_blocked_duality_gap_decreases(svm_data):
     assert all(g > -1e-3 for g in gaps)
 
 
+@pytest.mark.parametrize("accelerated", [False, True])
+def test_lasso_sa_remainder_iterations(lasso_data, accelerated):
+    """iterations % s != 0 (regression: objs.reshape(H) used to crash):
+    the SA Lasso solvers run the H mod s tail group and still match the
+    classical trajectory inner-iteration-for-inner-iteration."""
+    A, b, lam = lasso_data
+    prob = LassoProblem(A=A, b=b, lam=lam)
+    H, s = 10, 4
+    cfg = SolverConfig(block_size=4, iterations=H, accelerated=accelerated)
+    cfg_sa = SolverConfig(block_size=4, iterations=H, s=s,
+                          accelerated=accelerated)
+    assert cfg_sa.outer_iterations == 3     # 2 full groups + tail of 2
+    base = (acc_bcd_lasso if accelerated else bcd_lasso)(prob, cfg)
+    sa = (sa_acc_bcd_lasso if accelerated else sa_bcd_lasso)(prob, cfg_sa)
+    o1, o2 = np.asarray(base.objective), np.asarray(sa.objective)
+    assert o2.shape == (H,)
+    np.testing.assert_allclose(o2, o1, rtol=5e-5)
+    np.testing.assert_allclose(np.asarray(sa.x), np.asarray(base.x),
+                               atol=2e-5)
+
+
+def test_lasso_sa_shorter_than_one_group(lasso_data):
+    """H < s: zero full groups, the whole solve is the tail group."""
+    A, b, lam = lasso_data
+    prob = LassoProblem(A=A, b=b, lam=lam)
+    H, s = 3, 8
+    base = acc_bcd_lasso(prob, SolverConfig(block_size=4, iterations=H))
+    sa = sa_acc_bcd_lasso(prob, SolverConfig(block_size=4, iterations=H,
+                                             s=s))
+    np.testing.assert_allclose(np.asarray(sa.objective),
+                               np.asarray(base.objective), rtol=5e-5)
+
+
 def test_lasso_symmetric_gram_matches_dense(lasso_data):
     """Triangle-packed Allreduce (cfg.symmetric_gram) reduces the same
     values as the dense path, only re-laid-out -> identical iterates."""
