@@ -1,8 +1,10 @@
 """Structural verification of the SA claim on the compiled artifacts:
 count collectives (static ops x scan trip counts) in the distributed
-solver HLO for several s, and in the trainer for several microbatch
-settings. This is the dry-run analogue of the paper's latency
-measurements: runtime messages per solve = static collectives x trips.
+solver HLO for several s — for EVERY registered problem family (the
+list comes from ``repro.api.FAMILIES``, so a newly registered family is
+verified here with zero benchmark edits). This is the dry-run analogue
+of the paper's latency measurements: runtime messages per solve =
+static collectives x trips.
 
 Runs in a subprocess with 8 placeholder devices (the bench process keeps
 1 device).
@@ -20,74 +22,69 @@ CODE = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import re, jax
-from repro.core.distributed import lower_lasso_step, lower_svm_step
-from repro.core.types import SolverConfig
+from repro.core import api
+from repro.core.types import FAMILIES, SolverConfig
 from repro.roofline.analysis import collective_bytes_from_hlo
 
-mesh = jax.make_mesh((8,), ("data",))
-mesh_m = jax.make_mesh((8,), ("model",))
 H = 64
-for s in (1, 4, 16):
-    cfg = SolverConfig(block_size=4, iterations=H, s=s,
-                       track_objective=False)
-    txt = lower_lasso_step(cfg, mesh, m=512, n=128).compile().as_text()
-    static = len(re.findall(r"= \S+ all-reduce\(", txt))
-    trips = H // s
-    bytes_ = collective_bytes_from_hlo(txt)["total"]
-    print(f"LASSO s={s} static={static} trips={trips} "
-          f"runtime_msgs={static * trips} bytes_per_outer={bytes_}")
-for s in (1, 4, 16):
-    cfg = SolverConfig(block_size=1, iterations=H, s=s,
-                       track_objective=False)
-    txt = lower_svm_step(cfg, mesh_m, m=256, n=512).compile().as_text()
-    static = len(re.findall(r"= \S+ all-reduce\(", txt))
-    trips = H // s
-    print(f"SVM s={s} static={static} trips={trips} "
-          f"runtime_msgs={static * trips}")
-# Kernel SVM (SA-K-BDCD): the rbf norms column rides the same fused
-# Allreduce, so the kernelized solver must ALSO show exactly one static
-# all-reduce per outer (s-step) iteration.
-for s in (1, 4, 16):
-    cfg = SolverConfig(block_size=2, iterations=H, s=s,
-                       track_objective=False)
-    txt = lower_svm_step(cfg, mesh_m, m=256, n=512, kernel="rbf",
-                         kernel_params={"gamma": 0.1}).compile().as_text()
-    static = len(re.findall(r"= \S+ all-reduce\(", txt))
-    trips = H // s
-    print(f"KSVM s={s} static={static} trips={trips} "
-          f"runtime_msgs={static * trips}")
+# representative shapes per partition layout: row-partitioned families
+# shard data points, column-partitioned ones shard features.
+SHAPES = {"row": (512, 128), "col": (256, 512)}
+meshes = {}
+for name in sorted(FAMILIES):
+    fam = FAMILIES[name]
+    axis = fam.default_axes if isinstance(fam.default_axes, str) \
+        else fam.default_axes[0]
+    if axis not in meshes:
+        meshes[axis] = jax.make_mesh((8,), (axis,))
+    m, n = SHAPES[fam.partition]
+    for s in (1, 4, 16):
+        cfg = SolverConfig(block_size=fam.bench_block_size, iterations=H,
+                           s=s, track_objective=False)
+        txt = api.lower_solve(name, cfg, meshes[axis], m=m, n=n,
+                              axes=axis).compile().as_text()
+        static = len(re.findall(r"= \S+ all-reduce\(", txt))
+        trips = H // s
+        bytes_ = collective_bytes_from_hlo(txt)["total"]
+        print(f"{name.upper()} s={s} static={static} trips={trips} "
+              f"runtime_msgs={static * trips} bytes_per_outer={bytes_}")
 """
 
 
 def main():
     env = dict(os.environ, PYTHONPATH=SRC)
     out = subprocess.run([sys.executable, "-c", CODE], env=env,
-                         capture_output=True, text=True, timeout=1200)
+                         capture_output=True, text=True, timeout=1800)
     if out.returncode != 0:
         emit("collective_count/ERROR", 0.0, out.stderr[-300:].replace(
             "\n", " ")[:200])
         return
     rows = {}
     statics = {}
+    kinds = []
     for line in out.stdout.splitlines():
-        m = re.match(r"(LASSO|SVM|KSVM) s=(\d+) static=(\d+) trips=(\d+) "
-                     r"runtime_msgs=(\d+)", line)
+        m = re.match(r"([A-Z]+) s=(\d+) static=(\d+) trips=(\d+) "
+                     r"runtime_msgs=(\d+) bytes_per_outer=(\d+)", line)
         if m:
-            kind, s, static, trips, msgs = m.groups()
+            kind, s, static, trips, msgs, bytes_ = m.groups()
+            if kind not in kinds:
+                kinds.append(kind)
             rows[(kind, int(s))] = int(msgs)
             statics[(kind, int(s))] = int(static)
             emit(f"collective_count/{kind.lower()}/s{s}", 0.0,
-                 f"static={static};trips={trips};runtime_msgs={msgs}")
-    for kind in ("LASSO", "SVM", "KSVM"):
+                 f"static={static};trips={trips};runtime_msgs={msgs};"
+                 f"bytes_per_outer={bytes_}")
+    for kind in kinds:
         if (kind, 1) in rows and (kind, 16) in rows:
             red = rows[(kind, 1)] / max(rows[(kind, 16)], 1)
             emit(f"collective_count/{kind.lower()}/reduction_s16", 0.0,
                  f"latency_reduction={red:.1f}x(expected~16x)")
-    # the SA claim, structurally: ONE Allreduce per outer iteration.
+    # the SA claim, structurally: ONE Allreduce per outer iteration,
+    # for every registered family.
     if statics:
         worst = max(statics.values())
         emit("collective_count/one_allreduce_per_outer", 0.0,
-             f"max_static={worst};ok={worst == 1}")
+             f"max_static={worst};families={len(kinds)};ok={worst == 1}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,5 @@
-"""Quickstart: solve a Lasso problem with the paper's SA-accBCD and see
-that (a) it matches classical accBCD exactly, (b) the cost model predicts
-when SA wins.
+"""Quickstart: the ``repro.api`` facade — one ``solve`` call for every
+registered problem family, with the paper's SA trick behind ``cfg.s``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,23 +10,26 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import (LassoProblem, SolverConfig, acc_bcd_lasso,
-                        sa_acc_bcd_lasso)
+from repro import api
+from repro.api import LassoProblem, LogRegProblem, SolverConfig
 from repro.core.cost_model import Machine, ProblemDims, best_s
-from repro.data.sparse import make_lasso_dataset
+from repro.data.sparse import make_lasso_dataset, make_svm_dataset
 
 
 def main():
+    print(f"registered families: {', '.join(api.families())}")
+
     # 1. a synthetic sparse dataset mirroring LIBSVM news20's regime
     A, b, lam_max = make_lasso_dataset("news20-like", seed=0)
     prob = LassoProblem(A=A, b=b, lam=0.1 * lam_max)
     print(f"dataset: A {A.shape}, density {np.mean(A != 0):.4f}")
 
-    # 2. classical accelerated BCD (paper Alg. 1) vs SA-accBCD (Alg. 2)
+    # 2. classical accelerated BCD (paper Alg. 1) vs SA-accBCD (Alg. 2):
+    # same problem, same facade — only cfg.s changes. The family is
+    # inferred from the problem's type.
     H = 256
-    base = acc_bcd_lasso(prob, SolverConfig(block_size=8, iterations=H))
-    sa = sa_acc_bcd_lasso(prob, SolverConfig(block_size=8, iterations=H,
-                                             s=32))
+    base = api.solve(prob, SolverConfig(block_size=8, iterations=H))
+    sa = api.solve(prob, SolverConfig(block_size=8, iterations=H, s=32))
     o1, o2 = np.asarray(base.objective), np.asarray(sa.objective)
     print(f"objective: {o1[0]:.2f} -> {o1[-1]:.2f}")
     print(f"SA-vs-classical max trajectory deviation: "
@@ -36,7 +38,24 @@ def main():
     nnz = int(np.sum(np.abs(np.asarray(sa.x)) > 1e-8))
     print(f"solution sparsity: {nnz}/{A.shape[1]} nonzeros")
 
-    # 3. when does SA win? The paper's Table I cost model:
+    # 3. warm start: solve(..., x0=...) resumes where a solve left off —
+    # the second half of the budget continues the first half's trace.
+    half = api.solve(prob, SolverConfig(block_size=8, iterations=H // 2,
+                                        s=32))
+    rest = api.solve(prob, SolverConfig(block_size=8, iterations=H // 2,
+                                        s=32), x0=np.asarray(half.x))
+    print(f"warm start: {float(half.objective[-1]):.2f} -> resumes at "
+          f"{float(rest.objective[0]):.2f}")
+
+    # 4. a different family through the SAME entry point: SA logistic
+    # regression (arXiv:2011.08281), registered — not special-cased.
+    As, bs = make_svm_dataset("w1a-like", seed=0)
+    lres = api.solve(LogRegProblem(A=As, b=bs, lam=1e-3),
+                     SolverConfig(block_size=4, iterations=128, s=16))
+    lo = np.asarray(lres.objective)
+    print(f"logreg (SA, s=16): obj {lo[0]:.4f} -> {lo[-1]:.4f}")
+
+    # 5. when does SA win? The paper's Table I cost model:
     dims = ProblemDims(m=2_396_130, n=3_231_961, f=3.6e-5)  # url, at scale
     for P in (1024, 12288):
         s_star, speedup = best_s(dims, H=10_000, mu=1, P=P,

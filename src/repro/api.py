@@ -1,0 +1,36 @@
+"""``repro.api`` — the stable public surface of the solver library.
+
+    from repro import api
+    from repro.api import LassoProblem, SolverConfig
+
+    res = api.solve(LassoProblem(A=A, b=b, lam=lam),
+                    SolverConfig(block_size=8, s=16, iterations=512))
+
+One ``solve`` call reaches every registered problem family (lasso, svm,
+ksvm, logreg, and anything user code registers via ``register_family``)
+on every registered backend ("local", "sharded"). The hand-named legacy
+entry points in ``repro.core`` remain as thin shims over this facade.
+
+This module's ``__all__`` (together with ``repro.core.__all__``) is the
+checked API surface: ``tools/check_api_surface.py`` diffs it against
+``api_surface.txt`` in CI, so nothing here disappears silently.
+"""
+from repro.core.api import (BACKENDS, families, lower_solve,
+                            resolve_family, solve, solve_sharded)
+from repro.core.types import (FAMILIES, KERNELS, KernelSpec, LassoProblem,
+                              LogRegProblem, ProblemFamily, SVMProblem,
+                              SolverConfig, SolverResult,
+                              build_kernel_params, register_family,
+                              register_kernel)
+
+__all__ = [
+    # the facade
+    "solve", "solve_sharded", "lower_solve", "resolve_family", "families",
+    "BACKENDS",
+    # the registries
+    "FAMILIES", "ProblemFamily", "register_family",
+    "KERNELS", "KernelSpec", "register_kernel", "build_kernel_params",
+    # problem / config / result types
+    "LassoProblem", "SVMProblem", "LogRegProblem",
+    "SolverConfig", "SolverResult",
+]

@@ -1,15 +1,23 @@
 """Core library: the paper's synchronization-avoiding first-order solvers.
 
-Public API:
-    LassoProblem, SVMProblem, SolverConfig, SolverResult
-    solve_lasso, solve_svm              — single-host (dispatch on cfg.s)
-    solve_lasso_sharded, solve_svm_sharded — distributed (shard_map)
+Public API (see also the ``repro.api`` facade, which fronts all of this
+through one registry-driven ``solve`` call):
+    LassoProblem, SVMProblem, LogRegProblem, SolverConfig, SolverResult
+    FAMILIES / register_family            — the problem-family registry
+    KERNELS / register_kernel             — the SVM kernel registry
+    solve_lasso, solve_svm, solve_ksvm, solve_logreg
+                                          — per-family dispatch (cfg.s)
+    solve_lasso_sharded, solve_svm_sharded — distributed shims
+    plus the individually named solver variants (bcd_lasso, sa_bdcd_svm,
+    ...), all of which remain thin shims over the same implementations.
 """
-from repro.core.types import (KERNELS, KernelSpec, LassoProblem,
-                              SVMProblem, SolverConfig, SolverResult,
-                              register_kernel)
+from repro.core.types import (FAMILIES, KERNELS, KernelSpec, LassoProblem,
+                              LogRegProblem, ProblemFamily, SVMProblem,
+                              SolverConfig, SolverResult,
+                              build_kernel_params, register_family,
+                              register_kernel, require_unit_block)
 from repro.core.lasso import (acc_bcd_lasso, acc_cd_lasso, bcd_lasso,
-                              cd_lasso, solve_lasso)
+                              cd_lasso, lasso_objective, solve_lasso)
 from repro.core.sa_lasso import (sa_acc_bcd_lasso, sa_acc_cd_lasso,
                                  sa_bcd_lasso, sa_cd_lasso)
 from repro.core.svm import bdcd_svm, dcd_svm, duality_gap, \
@@ -17,15 +25,22 @@ from repro.core.svm import bdcd_svm, dcd_svm, duality_gap, \
 from repro.core.sa_svm import sa_bdcd_svm, sa_svm
 from repro.core.kernel_svm import (kbdcd_svm, kernel_dual_objective,
                                    sa_kbdcd_svm, solve_ksvm)
+from repro.core.logreg import bcd_logreg, logreg_objective, solve_logreg
+from repro.core.sa_logreg import sa_bcd_logreg
 from repro.core.distributed import solve_lasso_sharded, solve_svm_sharded
 
 __all__ = [
-    "KERNELS", "KernelSpec", "register_kernel",
-    "LassoProblem", "SVMProblem", "SolverConfig", "SolverResult",
+    "FAMILIES", "ProblemFamily", "register_family",
+    "KERNELS", "KernelSpec", "register_kernel", "build_kernel_params",
+    "require_unit_block",
+    "LassoProblem", "SVMProblem", "LogRegProblem",
+    "SolverConfig", "SolverResult",
     "acc_bcd_lasso", "acc_cd_lasso", "bcd_lasso", "cd_lasso", "solve_lasso",
+    "lasso_objective",
     "sa_acc_bcd_lasso", "sa_acc_cd_lasso", "sa_bcd_lasso", "sa_cd_lasso",
     "bdcd_svm", "dcd_svm", "sa_bdcd_svm", "sa_svm", "solve_svm",
     "kbdcd_svm", "sa_kbdcd_svm", "solve_ksvm", "kernel_dual_objective",
     "duality_gap", "dual_objective", "primal_objective",
+    "bcd_logreg", "sa_bcd_logreg", "solve_logreg", "logreg_objective",
     "solve_lasso_sharded", "solve_svm_sharded",
 ]

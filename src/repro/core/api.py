@@ -1,0 +1,274 @@
+"""The unified solver facade: ``repro.api.solve(problem, cfg, ...)``.
+
+One entry point, two registry axes:
+
+* **family** — which problem class (``FAMILIES`` in ``repro.core.types``,
+  populated by ``@register_family`` in each family's own module). The
+  family is inferred from the problem's type (plus its ``accepts`` hook,
+  which is how linear and kernel SVM share ``SVMProblem``), or forced
+  with ``family="..."``.
+* **backend** — where it runs (``BACKENDS`` here): ``"local"`` calls the
+  family's dispatch directly (optionally inside a caller-managed
+  ``shard_map`` via ``axis_name``); ``"sharded"`` wraps the SAME solver
+  in the generic distributed driver below, which builds the
+  shard_map/pad/unpad plumbing from the family's declared partition
+  axis — the paper's Fig. 1 row layout and Sec. V column layout are the
+  two values of one field, not two hand-written drivers.
+
+Every legacy entry point (``solve_lasso``, ``solve_svm_sharded``,
+``lower_svm_step``, ...) is a thin shim over this module, so the two
+paths are the same compiled program — bit-identical results, by
+construction and by test (tests/test_api.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.types import (FAMILIES, ProblemFamily, SolverConfig,
+                              SolverResult)
+
+# Importing the family modules is what populates FAMILIES: each family
+# self-registers from its own module (the ``KERNELS`` pattern). A new
+# family only needs to be imported somewhere — these four lines are the
+# complete dispatch "table".
+import repro.core.lasso       # noqa: F401  (registers "lasso")
+import repro.core.svm         # noqa: F401  (registers "svm")
+import repro.core.kernel_svm  # noqa: F401  (registers "ksvm")
+import repro.core.logreg      # noqa: F401  (registers "logreg")
+
+AxisNames = Union[str, Tuple[str, ...]]
+
+__all__ = [
+    "solve", "solve_sharded", "lower_solve", "resolve_family", "families",
+    "BACKENDS",
+]
+
+
+def families() -> Tuple[str, ...]:
+    """Registered family names, sorted."""
+    return tuple(sorted(FAMILIES))
+
+
+def resolve_family(problem=None, family: Optional[object] = None
+                   ) -> ProblemFamily:
+    """Resolve a family from an explicit name or the problem's type."""
+    if family is not None:
+        if isinstance(family, ProblemFamily):
+            return family
+        if family not in FAMILIES:
+            raise ValueError(
+                f"unknown family {family!r}; registered: {sorted(FAMILIES)}")
+        return FAMILIES[family]
+    matched = [f for f in FAMILIES.values() if f.matches(problem)]
+    if not matched:
+        raise ValueError(
+            f"no registered problem family handles "
+            f"{type(problem).__name__}; registered: {sorted(FAMILIES)}")
+    if len(matched) > 1:
+        raise ValueError(
+            f"problem matches several families "
+            f"({sorted(f.name for f in matched)}); disambiguate with "
+            f"family=...")
+    return matched[0]
+
+
+# ---------------------------------------------------------------------------
+# The generic sharded driver: ONE implementation of the pad/shard_map/
+# unpad plumbing, parameterized by the family's declared partition axis.
+# ---------------------------------------------------------------------------
+
+def _pad_to(x: np.ndarray, size: int, axis: int) -> np.ndarray:
+    pad = size - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return np.pad(x, widths)
+
+
+def _axis_size(mesh: Mesh, axes: AxisNames) -> int:
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _specs(fam: ProblemFamily, axes: AxisNames):
+    """PartitionSpecs implied by the family's partition axis: the sharded
+    vector spec, A's spec, b's spec, and the solution's output spec."""
+    part = axes if isinstance(axes, str) else tuple(axes)
+    vec = P(part)
+    if fam.partition == "row":
+        # Fig. 1: data points sharded; b rides with A; solutions and all
+        # R^(s mu)-sized reductions replicated.
+        return vec, P(part, None), vec, P()
+    # Sec. V: features sharded; everything in R^m replicated; the
+    # solution lives on the feature axis.
+    return vec, P(None, part), P(), vec
+
+
+def solve_sharded(problem, cfg: SolverConfig, mesh: Mesh,
+                  axes: Optional[AxisNames] = None,
+                  family: Optional[object] = None,
+                  x0=None) -> SolverResult:
+    """Distributed solve for ANY registered family.
+
+    Pads the partitioned axis of A to a multiple of the shard count
+    (zero padding is exact for every family — padded rows/columns
+    contribute 0 to every Gram/cross product and the corresponding
+    state coordinates stay 0), runs the family's own solver inside
+    ``shard_map`` with ``axis_name=axes``, and unpads the outputs. The
+    whole solve jits to ONE compiled program whose HLO carries exactly
+    ceil(H/s) all-reduces — see ``benchmarks/collective_count.py``.
+
+    ``axes`` may be a single mesh axis or a tuple (e.g. ('pod', 'data'))
+    — reductions then span pods hierarchically.
+    """
+    fam = resolve_family(problem, family)
+    if axes is None:
+        axes = fam.default_axes
+    n_shards = _axis_size(mesh, axes)
+    A = np.asarray(problem.A)
+    part_axis = 0 if fam.partition == "row" else 1
+    orig = A.shape[part_axis]
+    padded = -(-orig // n_shards) * n_shards
+    A = _pad_to(A, padded, part_axis)
+    b = np.asarray(problem.b)
+    if fam.partition == "row":
+        b = _pad_to(b, padded, 0)
+
+    vec, a_spec, b_spec, x_out = _specs(fam, axes)
+    aux_specs = tuple(vec if layout == "partition" else P()
+                      for _, layout in fam.aux_out)
+    in_specs = [a_spec, b_spec]
+    args = [jnp.asarray(A, cfg.dtype), jnp.asarray(b, cfg.dtype)]
+    if x0 is not None:
+        x0 = np.asarray(x0)
+        if fam.x0_layout == "partition":
+            x0 = _pad_to(x0, padded, 0)
+            in_specs.append(vec)
+        else:
+            in_specs.append(P())
+        args.append(jnp.asarray(x0, cfg.dtype))
+
+    def local_solve(A_loc, b_loc, *x0_loc):
+        local = dataclasses.replace(problem, A=A_loc, b=b_loc)
+        res = fam.solve(local, cfg, axis_name=axes,
+                        x0=x0_loc[0] if x0_loc else None)
+        return (res.x, res.objective) \
+            + tuple(res.aux[k] for k, _ in fam.aux_out)
+
+    fn = shard_map(local_solve, mesh=mesh, in_specs=tuple(in_specs),
+                   out_specs=(x_out, P()) + aux_specs, check_rep=False)
+    out = jax.jit(fn)(*args)
+    x, objective = out[0], out[1]
+    if fam.partition == "col":
+        x = x[:orig]
+    aux = {k: (v[:orig] if layout == "partition" else v)
+           for (k, layout), v in zip(fam.aux_out, out[2:])}
+    return SolverResult(x=x, objective=objective, aux=aux)
+
+
+def lower_solve(family: object, cfg: SolverConfig, mesh: Mesh,
+                m: int, n: int, axes: Optional[AxisNames] = None,
+                dtype=jnp.float32,
+                problem_kwargs: Optional[Dict[str, Any]] = None):
+    """Lower (without executing) a full distributed solve of any
+    registered family for shape (m, n) — the dry-run/collective-count
+    entry. Returns the ``jax.stages.Lowered`` object.
+
+    ``problem_kwargs`` fills the family's non-(A, b) problem fields;
+    defaults to the family's ``bench_problem_kwargs``.
+    """
+    fam = resolve_family(family=family)
+    if axes is None:
+        axes = fam.default_axes
+    kwargs = dict(fam.bench_problem_kwargs if problem_kwargs is None
+                  else problem_kwargs)
+    _, a_spec, b_spec, x_out = _specs(fam, axes)
+
+    def local_solve(A_loc, b_loc):
+        prob = fam.problem_cls(A=A_loc, b=b_loc, **kwargs)
+        res = fam.solve(prob, cfg, axis_name=axes)
+        return res.x, res.objective
+
+    fn = shard_map(local_solve, mesh=mesh, in_specs=(a_spec, b_spec),
+                   out_specs=(x_out, P()), check_rep=False)
+    return jax.jit(fn).lower(jax.ShapeDtypeStruct((m, n), dtype),
+                             jax.ShapeDtypeStruct((m,), dtype))
+
+
+# ---------------------------------------------------------------------------
+# The facade.
+# ---------------------------------------------------------------------------
+
+def _local_backend(fam: ProblemFamily, problem, cfg: SolverConfig, *,
+                   axis_name=None, mesh=None, axes=None, x0=None
+                   ) -> SolverResult:
+    if mesh is not None or axes is not None:
+        raise ValueError(
+            "mesh=/axes= are only meaningful with backend='sharded' "
+            "(the local backend runs single-host, or inside a "
+            "caller-managed shard_map via axis_name=)")
+    return fam.solve(problem, cfg, axis_name=axis_name, x0=x0)
+
+
+def _sharded_backend(fam: ProblemFamily, problem, cfg: SolverConfig, *,
+                     axis_name=None, mesh=None, axes=None, x0=None
+                     ) -> SolverResult:
+    if mesh is None:
+        raise ValueError("backend='sharded' requires mesh=...")
+    if axis_name is not None:
+        raise ValueError(
+            "axis_name= is managed by the sharded backend; pass axes= "
+            "to choose the mesh axes")
+    return solve_sharded(problem, cfg, mesh, axes=axes, family=fam, x0=x0)
+
+
+BACKENDS: Dict[str, Callable] = {
+    "local": _local_backend,
+    "sharded": _sharded_backend,
+}
+
+
+def solve(problem, cfg: Optional[SolverConfig] = None,
+          backend: str = "local", *,
+          family: Optional[object] = None,
+          axis_name=None, mesh: Optional[Mesh] = None,
+          axes: Optional[AxisNames] = None, x0=None,
+          callbacks: Optional[Sequence[Callable]] = None) -> SolverResult:
+    """Solve any registered problem family on any registered backend.
+
+    problem:  a registered problem dataclass (LassoProblem, SVMProblem,
+              LogRegProblem, ...); its type picks the family.
+    cfg:      SolverConfig (defaults to ``SolverConfig()``); cfg.s and
+              cfg.accelerated pick the variant inside the family.
+    backend:  "local" (single host / caller-managed shard_map) or
+              "sharded" (the generic distributed driver; needs mesh=).
+    family:   optional explicit family name, overriding type inference.
+    x0:       optional warm start in the family's iterate space (Lasso
+              x, SVM/K-SVM dual alpha, logreg w) — threaded through to
+              every solver; the objective trace resumes where a previous
+              solve's left off.
+    callbacks: optional callables, each invoked as ``cb(result)`` after
+              the solve (the solvers are single jitted programs, so
+              per-iteration hooks would force a host round-trip; consume
+              ``result.objective`` instead).
+    """
+    fam = resolve_family(problem, family)
+    if cfg is None:
+        cfg = SolverConfig()
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; registered: {sorted(BACKENDS)}")
+    result = BACKENDS[backend](fam, problem, cfg, axis_name=axis_name,
+                               mesh=mesh, axes=axes, x0=x0)
+    for cb in callbacks or ():
+        cb(result)
+    return result

@@ -123,6 +123,32 @@ def svm_costs(dims: ProblemDims, H: int, s: int, P: int,
     return {"F": F, "L": L, "W": W, "M": M, "I": float(H)}
 
 
+def logreg_costs(dims: ProblemDims, H: int, mu: int, s: int, P: int
+                 ) -> Dict[str, float]:
+    """(SA-)BCD logistic regression (arXiv:2011.08281 regime): the
+    per-group message is the (m, s*mu) cross block A Y^T (the replicated
+    margin vector f plays the role the kernel SVM's dual residual does),
+    so W = H mu m log P at L = (H/s) log P messages — kernel-SVM message
+    shape with linear-SVM flops: the cross GEMM mu s f n / P plus the
+    O(m mu) margin update and the mu^3 subproblem per inner iteration.
+    """
+    logP = max(math.log2(max(P, 2)), 1.0)
+    F = H * mu * dims.m * dims.f * dims.n / P + H * mu * dims.m \
+        + H * s * mu * mu + H * mu ** 3
+    L = (H / s) * logP
+    W = H * mu * dims.m * logP
+    M = (dims.f * dims.m * dims.n) / P + 3.0 * dims.m + s * mu * dims.m \
+        + dims.n / P
+    return {"F": F, "L": L, "W": W, "M": M, "I": float(H)}
+
+
+def logreg_speedup(dims: ProblemDims, H: int, s: int, P: int,
+                   machine: Machine, mu: int = 1) -> float:
+    t1 = predicted_time(logreg_costs(dims, H, mu, 1, P), machine)
+    ts = predicted_time(logreg_costs(dims, H, mu, s, P), machine)
+    return t1 / ts
+
+
 def predicted_time(costs: Dict[str, float], machine: Machine) -> float:
     return machine.gamma * costs["F"] + machine.beta * costs["W"] \
         + machine.alpha * costs["L"] + machine.kappa * costs.get("I", 0.0)

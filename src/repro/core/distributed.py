@@ -1,115 +1,45 @@
-"""Distributed drivers for the SA solvers: shard_map over the production
-mesh, reproducing the paper's data layouts (Fig. 1 / Sec. V):
+"""Legacy distributed entry points — thin shims over the generic
+registry-driven driver in ``repro.core.api``.
 
-* Lasso: A 1D-ROW-partitioned over the data-parallel axes. On the
-  multi-pod mesh the reduction runs hierarchically over ('pod', 'data')
-  — psum over a tuple of axes lowers to the hierarchical collective
-  schedule on the torus.
-* SVM:   A 1D-COLUMN-partitioned over the model axis.
+Historically this module hand-built the shard_map/pad/unpad plumbing
+separately for the Lasso (1D-row) and SVM (1D-column) layouts. That
+duplication now lives ONCE in ``repro.core.api.solve_sharded`` /
+``lower_solve``, parameterized by each family's declared partition axis;
+these wrappers only preserve the old names and signatures (and are what
+the shim-equivalence tests in tests/test_api.py pin down: same compiled
+program, bit-identical results).
 
-Rows/columns are zero-padded to a multiple of the shard count. Zero
-padding is exact for every quantity the solvers compute:
-  - Lasso: padded rows contribute 0 to A_h^T A_h and A_h^T r, and padded
-    b entries are 0 so the padded residual coordinates stay 0 forever.
-  - SVM: padded columns contribute 0 to ||A_i||^2 and A_i x, and the
-    corresponding x coordinates stay 0.
-
-The drivers jit the whole solve: ONE compiled program containing the full
-scan-over-iterations, whose HLO exhibits exactly H/s collectives — this is
-what ``benchmarks/collective_count.py`` verifies structurally.
+Layout reminder (see ``repro.core.api._specs``): Lasso rows are sharded
+over the data axes (reductions may span ('pod', 'data') hierarchically);
+SVM/K-SVM columns over the model axis. Zero padding is exact for every
+family — padded rows/columns contribute 0 to every Gram/cross product.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Sequence, Tuple, Union
+from typing import Optional, Tuple, Union
 
-import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
 
-from repro.core import lasso as lasso_lib, svm as svm_lib
-from repro.core.types import LassoProblem, SVMProblem, SolverConfig, SolverResult
+from repro.core import api
+from repro.core.api import _axis_size, _pad_to  # noqa: F401  (re-export)
+from repro.core.types import (LassoProblem, SVMProblem, SolverConfig,
+                              SolverResult)
 
 AxisNames = Union[str, Tuple[str, ...]]
 
 
-def _pad_to(x: np.ndarray, size: int, axis: int) -> np.ndarray:
-    pad = size - x.shape[axis]
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return np.pad(x, widths)
-
-
-def _axis_size(mesh: Mesh, axes: AxisNames) -> int:
-    if isinstance(axes, str):
-        return mesh.shape[axes]
-    return int(np.prod([mesh.shape[a] for a in axes]))
-
-
 def solve_lasso_sharded(problem: LassoProblem, cfg: SolverConfig,
                         mesh: Mesh, axes: AxisNames = "data") -> SolverResult:
-    """Row-partitioned distributed Lasso solve (classical or SA).
-
-    ``axes`` may be a single mesh axis or a tuple (e.g. ('pod', 'data')) —
-    the allreduce then spans pods hierarchically.
-    """
-    n_shards = _axis_size(mesh, axes)
-    A = np.asarray(problem.A)
-    b = np.asarray(problem.b)
-    m = A.shape[0]
-    m_pad = -(-m // n_shards) * n_shards
-    A = _pad_to(A, m_pad, 0)
-    b = _pad_to(b, m_pad, 0)
-
-    row_spec = P(axes) if isinstance(axes, str) else P(tuple(axes))
-    a_spec = P(row_spec[0], None)
-
-    def local_solve(A_loc, b_loc):
-        local_problem = LassoProblem(A=A_loc, b=b_loc, lam=problem.lam,
-                                     l2=problem.l2, groups=problem.groups)
-        res = lasso_lib.solve_lasso(local_problem, cfg, axis_name=axes)
-        return res.x, res.objective, res.aux["residual"]
-
-    fn = shard_map(local_solve, mesh=mesh,
-                   in_specs=(a_spec, row_spec),
-                   out_specs=(P(), P(), row_spec),
-                   check_rep=False)
-    x, objs, residual = jax.jit(fn)(jnp.asarray(A, cfg.dtype),
-                                    jnp.asarray(b, cfg.dtype))
-    return SolverResult(x=x, objective=objs, aux={"residual": residual[:m]})
+    """Row-partitioned distributed Lasso solve (classical or SA)."""
+    return api.solve_sharded(problem, cfg, mesh, axes=axes, family="lasso")
 
 
 def solve_svm_sharded(problem: SVMProblem, cfg: SolverConfig,
                       mesh: Mesh, axes: AxisNames = "model") -> SolverResult:
-    """Column-partitioned distributed SVM solve (classical or SA)."""
-    n_shards = _axis_size(mesh, axes)
-    A = np.asarray(problem.A)
-    n = A.shape[1]
-    n_pad = -(-n // n_shards) * n_shards
-    A = _pad_to(A, n_pad, 1)
-
-    col_spec = P(None, axes) if isinstance(axes, str) else P(None, tuple(axes))
-    x_spec = P(axes) if isinstance(axes, str) else P(tuple(axes))
-
-    def local_solve(A_loc, b_full):
-        local_problem = SVMProblem(A=A_loc, b=b_full, lam=problem.lam,
-                                   loss=problem.loss,
-                                   kernel=problem.kernel,
-                                   kernel_params=problem.kernel_params)
-        res = svm_lib.solve_svm(local_problem, cfg, axis_name=axes)
-        return res.x, res.objective, res.aux["alpha"]
-
-    fn = shard_map(local_solve, mesh=mesh,
-                   in_specs=(col_spec, P()),
-                   out_specs=(x_spec, P(), P()),
-                   check_rep=False)
-    x, objs, alpha = jax.jit(fn)(jnp.asarray(A, cfg.dtype),
-                                 jnp.asarray(problem.b, cfg.dtype))
-    return SolverResult(x=x[:n], objective=objs, aux={"alpha": alpha})
+    """Column-partitioned distributed SVM solve (classical or SA; the
+    family — linear BDCD vs kernelized K-BDCD — follows problem.kernel)."""
+    return api.solve_sharded(problem, cfg, mesh, axes=axes)
 
 
 def lower_lasso_step(cfg: SolverConfig, mesh: Mesh, m: int, n: int,
@@ -119,19 +49,8 @@ def lower_lasso_step(cfg: SolverConfig, mesh: Mesh, m: int, n: int,
 
     Returns the ``jax.stages.Lowered`` object.
     """
-    row_spec = P(axes) if isinstance(axes, str) else P(tuple(axes))
-    a_spec = P(row_spec[0], None)
-
-    def local_solve(A_loc, b_loc):
-        prob = LassoProblem(A=A_loc, b=b_loc, lam=0.1)
-        res = lasso_lib.solve_lasso(prob, cfg, axis_name=axes)
-        return res.x, res.objective
-
-    fn = shard_map(local_solve, mesh=mesh, in_specs=(a_spec, row_spec),
-                   out_specs=(P(), P()), check_rep=False)
-    A_spec = jax.ShapeDtypeStruct((m, n), dtype)
-    b_spec = jax.ShapeDtypeStruct((m,), dtype)
-    return jax.jit(fn).lower(A_spec, b_spec)
+    return api.lower_solve("lasso", cfg, mesh, m, n, axes=axes, dtype=dtype,
+                           problem_kwargs={"lam": 0.1})
 
 
 def lower_svm_step(cfg: SolverConfig, mesh: Mesh, m: int, n: int,
@@ -139,17 +58,8 @@ def lower_svm_step(cfg: SolverConfig, mesh: Mesh, m: int, n: int,
                    kernel: str = "linear", kernel_params=None):
     """Lower a full distributed SVM solve for shape (m, n); ``kernel``
     routes through the kernelized (SA-)K-BDCD solvers."""
-    col_spec = P(None, axes) if isinstance(axes, str) else P(None, tuple(axes))
-    x_spec = P(axes) if isinstance(axes, str) else P(tuple(axes))
-
-    def local_solve(A_loc, b_full):
-        prob = SVMProblem(A=A_loc, b=b_full, lam=1.0, kernel=kernel,
-                          kernel_params=kernel_params)
-        res = svm_lib.solve_svm(prob, cfg, axis_name=axes)
-        return res.x, res.objective
-
-    fn = shard_map(local_solve, mesh=mesh, in_specs=(col_spec, P()),
-                   out_specs=(x_spec, P()), check_rep=False)
-    A_spec = jax.ShapeDtypeStruct((m, n), dtype)
-    b_spec = jax.ShapeDtypeStruct((m,), dtype)
-    return jax.jit(fn).lower(A_spec, b_spec)
+    family = "svm" if kernel == "linear" else "ksvm"
+    return api.lower_solve(
+        family, cfg, mesh, m, n, axes=axes, dtype=dtype,
+        problem_kwargs={"lam": 1.0, "kernel": kernel,
+                        "kernel_params": kernel_params})

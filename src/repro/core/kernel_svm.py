@@ -51,9 +51,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import linalg
+from repro.core import cost_model, linalg
 from repro.core.sa_loop import grouped_impl_label, run_grouped
-from repro.core.types import SVMProblem, SolverConfig, SolverResult
+from repro.core.types import (SVMProblem, SolverConfig, SolverResult,
+                              register_family)
 from repro.kernels.svm_inner import inner_impl, svm_inner_loop
 
 
@@ -106,9 +107,10 @@ def kernel_dual_objective(problem: SVMProblem, alpha,
 
 def _init_state(problem: SVMProblem, cfg: SolverConfig, axis_name,
                 alpha0):
-    """alpha, its primal shadow x = A^T (b alpha) (local shard), and the
-    replicated dual residual f = K(A, A)(b alpha). alpha0 = None starts
-    at zero, where f and x are zero without any communication."""
+    """alpha, its primal shadow x = A^T (b alpha) (local shard), the
+    replicated dual residual f = K(A, A)(b alpha), and the starting dual
+    objective f_D(alpha0) for the incremental trace. alpha0 = None starts
+    at zero, where f, x and the dual are zero without any communication."""
     A = jnp.asarray(problem.A, cfg.dtype)
     b = jnp.asarray(problem.b, cfg.dtype)
     m = A.shape[0]
@@ -116,16 +118,22 @@ def _init_state(problem: SVMProblem, cfg: SolverConfig, axis_name,
         alpha = jnp.zeros((m,), cfg.dtype)
         f = jnp.zeros((m,), cfg.dtype)
         x = jnp.zeros((A.shape[1],), cfg.dtype)
-        return A, b, alpha, x, f
+        return A, b, alpha, x, f, jnp.asarray(0.0, cfg.dtype)
     alpha = jnp.asarray(alpha0, cfg.dtype)
     spec = problem.kernel_spec
     cross, anorms = _cross_and_norms(A, A, axis_name,
                                      _local_norms(A, spec.needs_norms))
     Kmat = spec.fn(cross, anorms, anorms,
                    problem.kernel_params).astype(cfg.dtype)
-    f = Kmat @ (b * alpha)
-    x = A.T @ (b * alpha)
-    return A, b, alpha, x, f
+    ba = b * alpha
+    f = Kmat @ ba
+    x = A.T @ ba
+    # f_D(alpha0), reusing the f we just built: warm-started solves resume
+    # the incremental dual trace where the previous solve left it.
+    gamma = jnp.asarray(problem.gamma, cfg.dtype)
+    dual0 = 0.5 * ba @ f + 0.5 * gamma * jnp.sum(alpha * alpha) \
+        - jnp.sum(alpha)
+    return A, b, alpha, x, f, dual0
 
 
 def kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
@@ -149,7 +157,7 @@ def kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
     gamma = jnp.asarray(problem.gamma, cfg.dtype)
     nu = jnp.asarray(problem.nu, cfg.dtype)
     key = jax.random.key(cfg.seed)
-    A, b, alpha, x, f = _init_state(problem, cfg, axis_name, alpha0)
+    A, b, alpha, x, f, dual0 = _init_state(problem, cfg, axis_name, alpha0)
     norms_local = _local_norms(A, problem.kernel_spec.needs_norms)
     m = A.shape[0]
     eye_mu = jnp.eye(mu, dtype=cfg.dtype)
@@ -181,7 +189,6 @@ def kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
         obj = dual if cfg.track_objective else jnp.asarray(0.0, cfg.dtype)
         return (alpha, x, f, dual), obj
 
-    dual0 = jnp.asarray(0.0, cfg.dtype)
     (alpha, x, f, dual), objs = jax.lax.scan(
         step, (alpha, x, f, dual0), jnp.arange(1, cfg.iterations + 1))
     return SolverResult(x=x, objective=objs,
@@ -207,7 +214,7 @@ def sa_kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
     gamma_f, nu_f = float(problem.gamma), float(problem.nu)
     key = jax.random.key(cfg.seed)
     s, H = cfg.s, cfg.iterations
-    A, b, alpha, x, f = _init_state(problem, cfg, axis_name, alpha0)
+    A, b, alpha, x, f, dual0 = _init_state(problem, cfg, axis_name, alpha0)
     norms_local = _local_norms(A, problem.kernel_spec.needs_norms)
     m = A.shape[0]
 
@@ -241,7 +248,6 @@ def sa_kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
         dual = dual + jnp.sum(deltas)
         return (alpha, x, f, dual), objs
 
-    dual0 = jnp.asarray(0.0, cfg.dtype)
     (alpha, x, f, dual), objs = run_grouped(
         group, (alpha, x, f, dual0), H, s, cfg.dtype)
     return SolverResult(x=x, objective=objs,
@@ -250,9 +256,62 @@ def sa_kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
                                  inner_impl, H, s, mu, cfg.use_pallas)})
 
 
+def _cli_kernel(args) -> str:
+    """--kernel is None when unset; the kernelized family defaults to
+    rbf, but an EXPLICIT --kernel linear is honored (the kernelized
+    linear path reproduces BDCD iterates — a communication-cost choice,
+    not an algorithmic one)."""
+    return args.kernel or "rbf"
+
+
+def _cli_problem(args):
+    from repro.data.sparse import make_svm_dataset
+    from repro.core.types import build_kernel_params
+    A, b = make_svm_dataset(args.dataset, args.seed)
+    kernel = _cli_kernel(args)
+    return SVMProblem(A=A, b=b, lam=1.0, loss=args.svm_loss, kernel=kernel,
+                      kernel_params=build_kernel_params(kernel, args))
+
+
+def _cli_describe(args, res, elapsed: float) -> str:
+    import numpy as np
+    obj = np.asarray(res.objective)
+    return (f"ksvm-{args.svm_loss}[{_cli_kernel(args)}] {args.dataset} "
+            f"s={args.s} mu={args.mu}: "
+            f"dual {obj[0]:.5f} -> {obj[-1]:.5f}, {elapsed:.2f}s")
+
+
+@register_family(
+    "ksvm",
+    problem_cls=SVMProblem,
+    partition="col",
+    default_axes="model",
+    x0_layout="replicated",          # warm start = dual alpha in R^m
+    aux_out=(("alpha", "replicated"), ("f", "replicated")),
+    accepts=lambda p: getattr(p, "kernel", "linear") != "linear",
+    variants={
+        "classical": "repro.core.kernel_svm:kbdcd_svm",
+        "sa": "repro.core.kernel_svm:sa_kbdcd_svm",
+    },
+    objective=kernel_dual_objective,
+    costs=lambda dims, H, mu, s, P: cost_model.svm_costs(
+        dims, H, s, P, mu=mu, kernel="rbf"),
+    make_problem=_cli_problem,
+    describe=_cli_describe,
+    default_mu=1,
+    bench_block_size=2,
+    bench_problem_kwargs={"lam": 1.0, "kernel": "rbf",
+                          "kernel_params": {"gamma": 0.1}},
+)
 def solve_ksvm(problem: SVMProblem, cfg: SolverConfig,
-               axis_name: Optional[object] = None) -> SolverResult:
-    """Dispatch on cfg.s: classical K-BDCD vs the SA unroll."""
+               axis_name: Optional[object] = None,
+               x0=None) -> SolverResult:
+    """Dispatch on cfg.s: classical K-BDCD vs the SA unroll.
+
+    x0: optional warm start for the dual vector alpha (replicated (m,));
+    rebuilding the dual residual f = K(b alpha) costs one extra setup
+    Allreduce (zero-start costs none).
+    """
     if cfg.s > 1:
-        return sa_kbdcd_svm(problem, cfg, axis_name)
-    return kbdcd_svm(problem, cfg, axis_name)
+        return sa_kbdcd_svm(problem, cfg, axis_name, x0)
+    return kbdcd_svm(problem, cfg, axis_name, x0)

@@ -22,8 +22,9 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import linalg, prox as prox_lib
-from repro.core.types import LassoProblem, SolverConfig, SolverResult
+from repro.core import cost_model, linalg, prox as prox_lib
+from repro.core.types import (LassoProblem, SolverConfig, SolverResult,
+                              register_family, require_unit_block)
 
 
 def _prep(problem: LassoProblem, cfg: SolverConfig):
@@ -54,13 +55,22 @@ def _objective(residual, x, problem, axis_name):
 # ---------------------------------------------------------------------------
 
 def bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
-              axis_name: Optional[object] = None) -> SolverResult:
-    """Classical (non-accelerated) randomized block coordinate descent."""
+              axis_name: Optional[object] = None,
+              x0=None) -> SolverResult:
+    """Classical (non-accelerated) randomized block coordinate descent.
+
+    x0: optional warm start (replicated (n,) vector). The residual is
+    rebuilt locally from the row shard — no communication.
+    """
     A, b, n, mu, q, sampler, prox = _prep(problem, cfg)
     key = jax.random.key(cfg.seed)
 
-    x0 = jnp.zeros((n,), cfg.dtype)
-    r0 = -b  # residual Ax - b at x = 0 (row shard)
+    if x0 is None:
+        x0 = jnp.zeros((n,), cfg.dtype)
+        r0 = -b  # residual Ax - b at x = 0 (row shard)
+    else:
+        x0 = jnp.asarray(x0, cfg.dtype)
+        r0 = A @ x0 - b
 
     def step(carry, h):
         x, r = carry
@@ -88,11 +98,15 @@ def bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
 # ---------------------------------------------------------------------------
 
 def acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
-                  axis_name: Optional[object] = None) -> SolverResult:
+                  axis_name: Optional[object] = None,
+                  x0=None) -> SolverResult:
     """Paper Algorithm 1: accelerated block coordinate descent for Lasso.
 
     State: z, y in R^n (replicated), ztil = Az - b, ytil = Ay in R^m
     (row-partitioned). x_h = theta_h^2 * y_h + z_h is implicit.
+
+    x0: optional warm start — seeds z (y restarts at 0, i.e. the
+    acceleration momentum resets, the standard warm-start convention).
     """
     A, b, n, mu, q, sampler, prox = _prep(problem, cfg)
     key = jax.random.key(cfg.seed)
@@ -101,9 +115,13 @@ def acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
     theta0 = jnp.asarray(mu / n, cfg.dtype)
     thetas = linalg.theta_schedule(theta0, H, q)          # (H+1,)
 
-    z0 = jnp.zeros((n,), cfg.dtype)
+    if x0 is None:
+        z0 = jnp.zeros((n,), cfg.dtype)
+        ztil0 = -b                                        # A z0 - b
+    else:
+        z0 = jnp.asarray(x0, cfg.dtype)
+        ztil0 = A @ z0 - b
     y0 = jnp.zeros((n,), cfg.dtype)
-    ztil0 = -b                                            # A z0 - b
     ytil0 = jnp.zeros_like(b)                             # A y0
 
     def step(carry, inputs):
@@ -143,21 +161,70 @@ def acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
 
 
 def cd_lasso(problem: LassoProblem, cfg: SolverConfig,
-             axis_name: Optional[object] = None) -> SolverResult:
+             axis_name: Optional[object] = None,
+             x0=None) -> SolverResult:
     """CD = BCD with mu = 1."""
-    assert cfg.block_size == 1
-    return bcd_lasso(problem, cfg, axis_name)
+    require_unit_block(cfg, "cd_lasso")
+    return bcd_lasso(problem, cfg, axis_name, x0)
 
 
 def acc_cd_lasso(problem: LassoProblem, cfg: SolverConfig,
-                 axis_name: Optional[object] = None) -> SolverResult:
+                 axis_name: Optional[object] = None,
+                 x0=None) -> SolverResult:
     """accCD = accBCD with mu = 1."""
-    assert cfg.block_size == 1
-    return acc_bcd_lasso(problem, cfg, axis_name)
+    require_unit_block(cfg, "acc_cd_lasso")
+    return acc_bcd_lasso(problem, cfg, axis_name, x0)
 
 
+def lasso_objective(problem: LassoProblem, x,
+                    axis_name: Optional[object] = None):
+    """Direct objective evaluation 1/2 ||Ax - b||^2 + g(x) (diagnostic)."""
+    A = jnp.asarray(problem.A)
+    x = jnp.asarray(x, A.dtype)
+    residual = A @ x - jnp.asarray(problem.b, A.dtype)
+    return _objective(residual, x, problem, axis_name)
+
+
+def _cli_problem(args):
+    from repro.data.sparse import make_lasso_dataset
+    A, b, lam_max = make_lasso_dataset(args.dataset, args.seed)
+    return LassoProblem(A=A, b=b, lam=args.lam_frac * lam_max)
+
+
+def _cli_describe(args, res, elapsed: float) -> str:
+    import numpy as np
+    obj = np.asarray(res.objective)
+    nnz = int(np.sum(np.abs(np.asarray(res.x)) > 1e-8))
+    return (f"lasso {args.dataset} s={args.s} mu={args.mu}: "
+            f"obj {obj[0]:.4f} -> {obj[-1]:.4f}, nnz(x)={nnz}, "
+            f"{elapsed:.2f}s")
+
+
+@register_family(
+    "lasso",
+    problem_cls=LassoProblem,
+    partition="row",
+    default_axes="data",
+    x0_layout="replicated",
+    aux_out=(("residual", "partition"),),
+    variants={
+        "classical": "repro.core.lasso:bcd_lasso",
+        "accelerated": "repro.core.lasso:acc_bcd_lasso",
+        "sa": "repro.core.sa_lasso:sa_bcd_lasso",
+        "sa_accelerated": "repro.core.sa_lasso:sa_acc_bcd_lasso",
+    },
+    objective=lasso_objective,
+    costs=lambda dims, H, mu, s, P: cost_model.lasso_costs(
+        dims, H, mu, s, P),
+    make_problem=_cli_problem,
+    describe=_cli_describe,
+    default_mu=8,
+    bench_block_size=4,
+    bench_problem_kwargs={"lam": 0.1},
+)
 def solve_lasso(problem: LassoProblem, cfg: SolverConfig,
-                axis_name: Optional[object] = None) -> SolverResult:
+                axis_name: Optional[object] = None,
+                x0=None) -> SolverResult:
     """Dispatch on (accelerated, s): s == 1 -> this module; s > 1 -> SA."""
     if cfg.s > 1:
         from repro.core import sa_lasso
@@ -165,4 +232,4 @@ def solve_lasso(problem: LassoProblem, cfg: SolverConfig,
               else sa_lasso.sa_bcd_lasso)
     else:
         fn = acc_bcd_lasso if cfg.accelerated else bcd_lasso
-    return fn(problem, cfg, axis_name)
+    return fn(problem, cfg, axis_name, x0)

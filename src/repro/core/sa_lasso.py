@@ -25,7 +25,8 @@ import jax.numpy as jnp
 from repro.core import linalg
 from repro.core.lasso import _objective, _prep
 from repro.core.sa_loop import run_grouped
-from repro.core.types import LassoProblem, SolverConfig, SolverResult
+from repro.core.types import (LassoProblem, SolverConfig, SolverResult,
+                              require_unit_block)
 from repro.kernels.gram import gram_t
 
 
@@ -78,14 +79,19 @@ def _sample_all(key, sampler, start, s_grp):
 # ---------------------------------------------------------------------------
 
 def sa_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
-                 axis_name: Optional[object] = None) -> SolverResult:
+                 axis_name: Optional[object] = None,
+                 x0=None) -> SolverResult:
     A, b, n, mu, q, sampler, prox = _prep(problem, cfg)
     key = jax.random.key(cfg.seed)
     s, H = cfg.s, cfg.iterations
     m_loc = A.shape[0]
 
-    x0 = jnp.zeros((n,), cfg.dtype)
-    r0 = -b
+    if x0 is None:
+        x0 = jnp.zeros((n,), cfg.dtype)
+        r0 = -b
+    else:
+        x0 = jnp.asarray(x0, cfg.dtype)
+        r0 = A @ x0 - b
 
     def group(carry, start, s):
         x, r = carry
@@ -142,7 +148,8 @@ def sa_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
 # ---------------------------------------------------------------------------
 
 def sa_acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
-                     axis_name: Optional[object] = None) -> SolverResult:
+                     axis_name: Optional[object] = None,
+                     x0=None) -> SolverResult:
     A, b, n, mu, q, sampler, prox = _prep(problem, cfg)
     key = jax.random.key(cfg.seed)
     s, H = cfg.s, cfg.iterations
@@ -151,9 +158,13 @@ def sa_acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
     theta0 = jnp.asarray(mu / n, cfg.dtype)
     thetas = linalg.theta_schedule(theta0, H, q)          # (H+1,)
 
-    z0 = jnp.zeros((n,), cfg.dtype)
+    if x0 is None:
+        z0 = jnp.zeros((n,), cfg.dtype)
+        ztil0 = -b
+    else:
+        z0 = jnp.asarray(x0, cfg.dtype)
+        ztil0 = A @ z0 - b
     y0 = jnp.zeros((n,), cfg.dtype)
-    ztil0 = -b
     ytil0 = jnp.zeros_like(b)
 
     def group(carry, start, s):
@@ -226,11 +237,11 @@ def sa_acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
                         aux={"residual": thH * thH * ytil + ztil})
 
 
-def sa_cd_lasso(problem, cfg, axis_name=None):
-    assert cfg.block_size == 1
-    return sa_bcd_lasso(problem, cfg, axis_name)
+def sa_cd_lasso(problem, cfg, axis_name=None, x0=None):
+    require_unit_block(cfg, "sa_cd_lasso")
+    return sa_bcd_lasso(problem, cfg, axis_name, x0)
 
 
-def sa_acc_cd_lasso(problem, cfg, axis_name=None):
-    assert cfg.block_size == 1
-    return sa_acc_bcd_lasso(problem, cfg, axis_name)
+def sa_acc_cd_lasso(problem, cfg, axis_name=None, x0=None):
+    require_unit_block(cfg, "sa_acc_cd_lasso")
+    return sa_acc_bcd_lasso(problem, cfg, axis_name, x0)

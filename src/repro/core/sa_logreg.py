@@ -1,0 +1,100 @@
+"""Synchronization-Avoiding logistic regression — the s-step unroll of
+``bcd_logreg`` (after Devarakonda & Demmel, arXiv:2011.08281).
+
+The SA trick applies because every update direction lives in the span of
+the sampled rows: unrolling s damped steps,
+
+    w_{sk+s} = (prod_j d_j) w_sk + Y^T u,    d_j = 1 - eta_j lam,
+
+where u accumulates the per-step coefficients, each decayed by the
+d-factors of the LATER steps. So the solver samples all s blocks up
+front, Allreduces the fused (m, s*mu) cross block  A Y^T  ONCE, and runs
+the s dependent inner updates redundantly on replicated data:
+
+  * the margins f (replicated R^m) update per inner step as
+    f <- d f + (A Y^T)[:, B_j] u_j  — a local slice of the reduced cross
+    block, so gathers f[B_t] at later steps are automatically current
+    (this also makes same-index collisions across the s blocks exact
+    with no special casing: there is only ONE copy of each margin);
+  * the coefficient buffer decays, U <- d U then U[j] += u_j, recording
+    exactly the d-products the closed form above requires;
+  * sq = ||w||^2 updates from gathered margins and the (s*mu, s*mu)
+    diagonal slice of the cross block (DESIGN.md).
+
+Deferred per outer group: ONE local GEMV  w <- rho w + Y^T vec(U)  with
+rho = prod_j d_j. Identical iterates to ``bcd_logreg`` in exact
+arithmetic; ONE Allreduce per s inner iterations. Remainder iterations
+(H mod s != 0) run as a tail group via ``run_grouped``, like every other
+SA solver.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linalg
+from repro.core.logreg import _init_state, _step_size, _tracked_objective
+from repro.core.sa_loop import run_grouped
+from repro.core.types import LogRegProblem, SolverConfig, SolverResult
+
+
+def sa_bcd_logreg(problem: LogRegProblem, cfg: SolverConfig,
+                  axis_name: Optional[object] = None,
+                  x0=None) -> SolverResult:
+    """s-step unrolled BCD logistic regression: identical iterates to
+    ``bcd_logreg`` in exact arithmetic, ONE Allreduce per s inner
+    iterations."""
+    mu = cfg.block_size
+    lam = jnp.asarray(problem.lam, cfg.dtype)
+    key = jax.random.key(cfg.seed)
+    s, H = cfg.s, cfg.iterations
+    A, b, w, f, sq = _init_state(problem, cfg, axis_name, x0)
+    m = A.shape[0]
+
+    def group(carry, start, s_grp):
+        w, f, sq = carry
+        # same fold_in iteration ids as the classical solver -> the SA
+        # schedule draws bit-identical blocks.
+        hs = start + 1 + jnp.arange(s_grp)
+        idxs = jax.vmap(
+            lambda h: linalg.sample_block(jax.random.fold_in(key, h),
+                                          m, mu))(hs)     # (s_grp, mu)
+        flat = idxs.reshape(s_grp * mu)
+        Y = A[flat]                                       # (s_grp*mu, n_loc)
+        # --- Communication: ONE fused Allreduce of  A Y^T ---
+        cross = linalg.preduce(A @ Y.T, axis_name)        # (m, s_grp*mu)
+        cross_r = cross.reshape(m, s_grp, mu)
+        b_sel = b[flat].reshape(s_grp, mu)
+
+        def inner(inner_carry, j):
+            f, sq, rho, U = inner_carry
+            idx_j = idxs[j]
+            Kj = cross_r[:, j, :]                         # (m, mu) = A Y_j^T
+            G = Kj[idx_j]                                 # (mu, mu) = Y_j Y_j^T
+            fB = f[idx_j]                                 # current Y_j w
+            c = -b_sel[j] * jax.nn.sigmoid(-b_sel[j] * fB)
+            eta = _step_size(G, mu, lam, cfg.power_iters)
+            d = 1.0 - eta * lam
+            u = -(eta / mu) * c                           # (mu,)
+            sq = d * d * sq + 2.0 * d * (fB @ u) + u @ (G @ u)
+            f = d * f + Kj @ u                            # replicated, local
+            rho = d * rho
+            U = (d * U).at[j].add(u)                      # decay, then record
+            obj = _tracked_objective(f, sq, b, lam) if cfg.track_objective \
+                else jnp.asarray(0.0, cfg.dtype)
+            return (f, sq, rho, U), obj
+
+        rho0 = jnp.asarray(1.0, cfg.dtype)
+        U0 = jnp.zeros((s_grp, mu), cfg.dtype)
+        (f, sq, rho, U), objs = jax.lax.scan(
+            inner, (f, sq, rho0, U0), jnp.arange(s_grp))
+
+        # Deferred w update (local GEMV): w <- rho w + Y^T vec(U).
+        w = rho * w + Y.T @ U.reshape(s_grp * mu)
+        return (w, f, sq), objs
+
+    (w, f, sq), objs = run_grouped(group, (w, f, sq), H, s, cfg.dtype)
+    return SolverResult(x=w, objective=objs,
+                        aux={"margins": f, "w_norm_sq": sq})

@@ -38,7 +38,8 @@ import jax.numpy as jnp
 from repro.core import linalg
 from repro.core.sa_lasso import _gram_and_proj
 from repro.core.sa_loop import grouped_impl_label, run_grouped
-from repro.core.types import SVMProblem, SolverConfig, SolverResult
+from repro.core.types import (SVMProblem, SolverConfig, SolverResult,
+                              require_unit_block)
 from repro.kernels.svm_inner import inner_impl, svm_inner_loop
 
 
@@ -59,6 +60,11 @@ def sa_bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
     alpha = jnp.zeros((m,), cfg.dtype) if alpha0 is None \
         else jnp.asarray(alpha0, cfg.dtype)
     x = A.T @ (b * alpha)                                 # line 2 (local)
+    # warm start: resume incremental dual tracking from f_D(alpha0), as in
+    # ``bdcd_svm``, reusing the x just built (zero-start: no communication).
+    dual0 = jnp.asarray(0.0, cfg.dtype) if alpha0 is None else (
+        0.5 * linalg.preduce(jnp.sum(x * x), axis_name)
+        + 0.5 * gamma * jnp.sum(alpha * alpha) - jnp.sum(alpha))
 
     def group(carry, start, s_grp):
         """One outer group of s_grp block updates; ``start`` is the
@@ -96,7 +102,6 @@ def sa_bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
         dual = dual + jnp.sum(deltas)
         return (alpha, x, dual), objs
 
-    dual0 = jnp.asarray(0.0, cfg.dtype)
     (alpha, x, dual), objs = run_grouped(group, (alpha, x, dual0), H, s,
                                          cfg.dtype)
     return SolverResult(x=x, objective=objs,
@@ -110,5 +115,5 @@ def sa_svm(problem: SVMProblem, cfg: SolverConfig,
            alpha0=None) -> SolverResult:
     """Paper Algorithm 4: the block_size = 1 special case of
     ``sa_bdcd_svm``."""
-    assert cfg.block_size == 1
+    require_unit_block(cfg, "sa_svm")
     return sa_bdcd_svm(problem, cfg, axis_name, alpha0)

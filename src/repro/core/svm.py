@@ -29,8 +29,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import linalg
-from repro.core.types import SVMProblem, SolverConfig, SolverResult
+from repro.core import cost_model, linalg
+from repro.core.types import (SVMProblem, SolverConfig, SolverResult,
+                              register_family, require_unit_block)
 
 
 def primal_objective(problem: SVMProblem, x, axis_name: Optional[object] = None):
@@ -98,6 +99,13 @@ def bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
     alpha = jnp.zeros((m,), cfg.dtype) if alpha0 is None \
         else jnp.asarray(alpha0, cfg.dtype)
     x = A.T @ (b * alpha)                                # line 2 (local shard)
+    # incremental tracking resumes from f_D(alpha0) on warm start (zero at
+    # alpha0 = 0 without any communication), so a warm-started solve's
+    # objective trace continues the previous solve's. Reuses the x we just
+    # built: f_D(alpha) = 1/2 ||A^T(b a)||^2 + gamma/2 ||a||^2 - e^T a.
+    dual0 = jnp.asarray(0.0, cfg.dtype) if alpha0 is None else (
+        0.5 * linalg.preduce(jnp.sum(x * x), axis_name)
+        + 0.5 * gamma * jnp.sum(alpha * alpha) - jnp.sum(alpha))
     eye_mu = jnp.eye(mu, dtype=cfg.dtype)
 
     def step(carry, h):
@@ -127,7 +135,6 @@ def bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
         obj = dual if cfg.track_objective else jnp.asarray(0.0, cfg.dtype)
         return (alpha, x, dual), obj
 
-    dual0 = jnp.asarray(0.0, cfg.dtype)
     (alpha, x, dual), objs = jax.lax.scan(
         step, (alpha, x, dual0), jnp.arange(1, cfg.iterations + 1))
     return SolverResult(x=x, objective=objs,
@@ -138,12 +145,56 @@ def dcd_svm(problem: SVMProblem, cfg: SolverConfig,
             axis_name: Optional[object] = None,
             alpha0=None) -> SolverResult:
     """Paper Algorithm 3: the block_size = 1 special case of ``bdcd_svm``."""
-    assert cfg.block_size == 1
+    require_unit_block(cfg, "dcd_svm")
     return bdcd_svm(problem, cfg, axis_name, alpha0)
 
 
+def _cli_kernel(args) -> str:
+    """--kernel is None when unset; this family defaults to linear."""
+    return args.kernel or "linear"
+
+
+def _cli_problem(args):
+    from repro.data.sparse import make_svm_dataset
+    from repro.core.types import build_kernel_params
+    A, b = make_svm_dataset(args.dataset, args.seed)
+    kernel = _cli_kernel(args)
+    return SVMProblem(A=A, b=b, lam=1.0, loss=args.svm_loss, kernel=kernel,
+                      kernel_params=build_kernel_params(kernel, args))
+
+
+def _cli_describe(args, res, elapsed: float) -> str:
+    import numpy as np
+    obj = np.asarray(res.objective)
+    return (f"svm-{args.svm_loss}[{_cli_kernel(args)}] {args.dataset} "
+            f"s={args.s} mu={args.mu}: "
+            f"dual {obj[0]:.5f} -> {obj[-1]:.5f}, {elapsed:.2f}s")
+
+
+@register_family(
+    "svm",
+    problem_cls=SVMProblem,
+    partition="col",
+    default_axes="model",
+    x0_layout="replicated",          # warm start = dual alpha in R^m
+    aux_out=(("alpha", "replicated"),),
+    accepts=lambda p: getattr(p, "kernel", "linear") == "linear",
+    variants={
+        "classical": "repro.core.svm:bdcd_svm",
+        "sa": "repro.core.sa_svm:sa_bdcd_svm",
+    },
+    objective=dual_objective,
+    costs=lambda dims, H, mu, s, P: cost_model.svm_costs(
+        dims, H, s, P, mu=mu),
+    make_problem=_cli_problem,
+    describe=_cli_describe,
+    default_mu=1,
+    bench_block_size=1,
+    bench_problem_kwargs={"lam": 1.0},
+)
 def solve_svm(problem: SVMProblem, cfg: SolverConfig,
-              axis_name: Optional[object] = None) -> SolverResult:
+              axis_name: Optional[object] = None,
+              x0=None) -> SolverResult:
     """Dispatch on (problem.kernel, cfg.s).
 
     Linear problems keep the primal-shadowing (SA-)BDCD solvers with
@@ -151,11 +202,13 @@ def solve_svm(problem: SVMProblem, cfg: SolverConfig,
     kernelized (SA-)K-BDCD solvers of ``repro.core.kernel_svm``
     (``kernel="linear"`` there reproduces the same iterates — the
     dispatch is a communication-cost choice, not an algorithmic one).
+
+    x0: optional warm start for the dual vector alpha (replicated (m,)).
     """
     if getattr(problem, "kernel", "linear") != "linear":
         from repro.core.kernel_svm import solve_ksvm
-        return solve_ksvm(problem, cfg, axis_name)
+        return solve_ksvm(problem, cfg, axis_name, x0)
     if cfg.s > 1:
         from repro.core.sa_svm import sa_bdcd_svm
-        return sa_bdcd_svm(problem, cfg, axis_name)
-    return bdcd_svm(problem, cfg, axis_name)
+        return sa_bdcd_svm(problem, cfg, axis_name, x0)
+    return bdcd_svm(problem, cfg, axis_name, x0)

@@ -13,7 +13,8 @@ the synchronization-avoiding (SA) s-step reformulation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+import importlib
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -36,24 +37,47 @@ class KernelSpec:
     fn(cross, unorms, vnorms, params) -> K, all element-wise on the reduced
     cross-product block ``cross`` (p, q); ``unorms`` (p,) / ``vnorms`` (q,)
     are the squared row norms (only materialized when ``needs_norms``).
+
+    cli_params maps each hyperparameter the launcher exposes to its
+    default value (the flag's type is the default's type): the launcher
+    generates a ``--kernel-<name>`` flag per entry and
+    :func:`build_kernel_params` forwards every one — keeping the CLI
+    registry-driven (a new kernel's flags need no launcher edits, and
+    nothing is silently dropped).
     """
 
     name: str
     fn: Callable
     needs_norms: bool = False
+    cli_params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
 
 KERNELS: Dict[str, KernelSpec] = {}
 
 
-def register_kernel(name: str, needs_norms: bool = False):
+def register_kernel(name: str, needs_norms: bool = False,
+                    cli_params: Optional[Mapping[str, Any]] = None):
     """Decorator: add a kernel to the registry (``KERNELS[name]``)."""
 
     def deco(fn):
-        KERNELS[name] = KernelSpec(name=name, fn=fn, needs_norms=needs_norms)
+        KERNELS[name] = KernelSpec(name=name, fn=fn, needs_norms=needs_norms,
+                                   cli_params=dict(cli_params or {}))
         return fn
 
     return deco
+
+
+def build_kernel_params(kernel: str, args) -> Optional[Dict[str, Any]]:
+    """Collect a registered kernel's hyperparameters from parsed CLI args
+    (``--kernel-gamma`` -> ``args.kernel_gamma`` -> ``{"gamma": ...}``).
+
+    Forwards EVERY declared parameter — the historical launcher built
+    these dicts by hand and silently dropped poly's ``coef0``.
+    """
+    spec = KERNELS[kernel]
+    if not spec.cli_params:
+        return None
+    return {p: getattr(args, f"kernel_{p}") for p in spec.cli_params}
 
 
 @register_kernel("linear")
@@ -61,7 +85,8 @@ def _linear_kernel(cross, unorms, vnorms, params):
     return cross
 
 
-@register_kernel("poly")
+@register_kernel("poly", cli_params={"degree": 3, "coef0": 1.0,
+                                     "scale": 1.0})
 def _poly_kernel(cross, unorms, vnorms, params):
     p = params or {}
     scale = p.get("scale", 1.0)
@@ -70,7 +95,7 @@ def _poly_kernel(cross, unorms, vnorms, params):
     return (scale * cross + coef0) ** degree
 
 
-@register_kernel("rbf", needs_norms=True)
+@register_kernel("rbf", needs_norms=True, cli_params={"gamma": 0.1})
 def _rbf_kernel(cross, unorms, vnorms, params):
     p = params or {}
     width = p.get("gamma", 0.1)
@@ -145,6 +170,153 @@ class SVMProblem:
     @property
     def nu(self) -> float:
         return self.lam if self.loss == "l1" else jnp.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class LogRegProblem:
+    """Binary logistic-regression problem data (communication-avoiding
+    logistic regression, after Devarakonda & Demmel, arXiv:2011.08281).
+
+    A: (m, n) data matrix; in the distributed solver A holds the *local
+       column shard* (1D-column partitioning, exactly the SVM layout:
+       w in R^n is partitioned, everything in R^m is replicated).
+    b: (m,) binary labels in {-1, +1} (replicated when distributed).
+    lam: l2 regularization weight — the objective is
+         (1/m) sum_i log(1 + exp(-b_i a_i^T w)) + lam/2 ||w||^2.
+    """
+
+    A: Any
+    b: Any
+    lam: float = 0.0
+
+    @property
+    def shape(self):
+        return self.A.shape
+
+
+# ---------------------------------------------------------------------------
+# Problem-family registry (the ``repro.api`` dispatch axis).
+#
+# A ProblemFamily self-describes everything the generic machinery needs to
+# drive a problem class end-to-end: which solver variants exist, how the
+# data matrix is partitioned when sharded (so ONE driver can build the
+# shard_map/pad/unpad plumbing for every family), its objective and
+# cost-model entries, and how the CLI builds/reports a problem. Families
+# register themselves from their own module via ``@register_family`` —
+# mirroring the ``KERNELS`` pattern above — so adding a workload is a pure
+# registration: no edits to dispatch, the distributed driver, or the CLI.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ProblemFamily:
+    """A registered problem family.
+
+    solve:      the family's variant-dispatching entry point
+                ``fn(problem, cfg, axis_name=None, x0=None) -> SolverResult``
+                (the function ``@register_family`` decorates).
+    variants:   variant name -> "module.path:function" (resolved lazily via
+                :meth:`variant`, so registration never imports the SA
+                modules eagerly).
+    partition:  which axis of A the sharded backend partitions — "row"
+                (Lasso: data points sharded, solutions replicated) or
+                "col" (SVM/logreg: features sharded, R^m state replicated).
+    default_axes: default mesh axis (or tuple of axes) for the sharded
+                backend ("data" for row partition, "model" for column).
+    x0_layout:  how a warm start vector is laid out when sharded —
+                "replicated" (Lasso x, SVM alpha) or "partition" (logreg
+                w, which lives on the partitioned feature axis).
+    aux_out:    ``(aux_key, layout)`` pairs the sharded driver returns from
+                ``SolverResult.aux``; layout "partition" vectors are
+                sharded along the partition axis (and unpadded), layout
+                "replicated" vectors pass through.
+    accepts:    optional tie-break predicate when several families share a
+                problem dataclass (linear vs kernel SVM).
+    objective:  direct objective evaluation ``fn(problem, x_or_alpha)``.
+    costs:      cost-model entry ``fn(dims, H, mu, s, P) -> dict`` (paper
+                Table I analogue).
+    make_problem / describe: CLI hooks — build a problem from parsed
+                ``argparse`` args; format a one-line result summary.
+    default_mu: CLI default block size.
+    bench_problem_kwargs / bench_block_size: how benchmarks instantiate a
+                representative problem (collective counts, lowering).
+    """
+
+    name: str
+    problem_cls: type
+    solve: Callable
+    variants: Mapping[str, str]
+    partition: str = "row"
+    default_axes: Any = "data"
+    x0_layout: str = "replicated"
+    aux_out: Tuple[Tuple[str, str], ...] = ()
+    accepts: Optional[Callable] = None
+    objective: Optional[Callable] = None
+    costs: Optional[Callable] = None
+    make_problem: Optional[Callable] = None
+    describe: Optional[Callable] = None
+    default_mu: int = 1
+    bench_block_size: int = 1
+    bench_problem_kwargs: Mapping[str, Any] = \
+        dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.partition not in ("row", "col"):
+            raise ValueError(
+                f"partition must be 'row' or 'col', got {self.partition!r}")
+        if self.x0_layout not in ("replicated", "partition"):
+            raise ValueError(
+                f"x0_layout must be 'replicated' or 'partition', "
+                f"got {self.x0_layout!r}")
+
+    def variant(self, name: str) -> Callable:
+        """Resolve a registered variant name to its solver function."""
+        if name not in self.variants:
+            raise ValueError(
+                f"unknown variant {name!r} for family {self.name!r}; "
+                f"registered: {sorted(self.variants)}")
+        module, _, attr = self.variants[name].partition(":")
+        return getattr(importlib.import_module(module), attr)
+
+    def matches(self, problem) -> bool:
+        """Does this family handle ``problem``? (type + accepts hook)."""
+        return isinstance(problem, self.problem_cls) and (
+            self.accepts is None or bool(self.accepts(problem)))
+
+
+FAMILIES: Dict[str, ProblemFamily] = {}
+
+
+def register_family(name: str, **fields):
+    """Decorator: register the decorated variant-dispatch function as the
+    ``solve`` entry of a new :class:`ProblemFamily` (``FAMILIES[name]``).
+
+    Mirrors :func:`register_kernel`: families self-register from their own
+    module, so a new workload needs zero edits elsewhere.
+    """
+
+    def deco(fn):
+        if name in FAMILIES:
+            raise ValueError(
+                f"family {name!r} already registered "
+                f"(registered: {sorted(FAMILIES)})")
+        FAMILIES[name] = ProblemFamily(name=name, solve=fn, **fields)
+        return fn
+
+    return deco
+
+
+def require_unit_block(cfg: "SolverConfig", solver_name: str) -> None:
+    """Raise for the mu = 1 solver aliases when cfg asks for blocks.
+
+    A hard ``ValueError`` (not ``assert``, which silently vanishes under
+    ``python -O``): calling a single-coordinate alias with block_size > 1
+    would silently solve a different problem than requested.
+    """
+    if cfg.block_size != 1:
+        raise ValueError(
+            f"{solver_name} is the block_size == 1 special case "
+            f"(got block_size={cfg.block_size}); call the blocked "
+            f"variant instead")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,350 @@
+"""The ``repro.api`` facade and the problem-family registry.
+
+Three contracts under test:
+
+1. **Shim equivalence** — every legacy entry point is a thin shim over
+   ``repro.api.solve``: same compiled program, BIT-identical results
+   (``np.array_equal``, not allclose), per family x variant x backend.
+2. **Registry round-trip** — ``register_family`` on a toy family makes it
+   reachable from ``solve``; unknown family/backend/variant errors list
+   the registered names (the ``SVMProblem.__post_init__`` convention).
+3. **Warm start** — ``solve(..., x0=...)`` resumes a second solve at the
+   first solve's final objective, for every family.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import (FAMILIES, LassoProblem, LogRegProblem, ProblemFamily,
+                       SVMProblem, SolverConfig, register_family)
+from repro.core import (acc_bcd_lasso, acc_cd_lasso, bcd_lasso, bcd_logreg,
+                        bdcd_svm, cd_lasso, dcd_svm, kbdcd_svm,
+                        sa_acc_bcd_lasso, sa_acc_cd_lasso, sa_bcd_lasso,
+                        sa_bcd_logreg, sa_bdcd_svm, sa_cd_lasso, sa_kbdcd_svm,
+                        sa_svm)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _problems(lasso_data, svm_data):
+    A, b, lam = lasso_data
+    As, bs = svm_data
+    return {
+        "lasso": LassoProblem(A=A, b=b, lam=lam),
+        "svm": SVMProblem(A=As, b=bs, lam=1.0),
+        "ksvm": SVMProblem(A=As, b=bs, lam=1.0, kernel="rbf",
+                           kernel_params={"gamma": 0.1}),
+        "logreg": LogRegProblem(A=As, b=bs, lam=1e-3),
+    }
+
+
+# ---------------------------------------------------------------------------
+# 1. shim equivalence, local backend: family x variant, bit-identical.
+# ---------------------------------------------------------------------------
+
+# (family, legacy fn, cfg kwargs driving api.solve to the same variant)
+LOCAL_CASES = [
+    ("lasso", bcd_lasso, dict(block_size=4, s=1, accelerated=False)),
+    ("lasso", acc_bcd_lasso, dict(block_size=4, s=1, accelerated=True)),
+    ("lasso", sa_bcd_lasso, dict(block_size=4, s=8, accelerated=False)),
+    ("lasso", sa_acc_bcd_lasso, dict(block_size=4, s=8, accelerated=True)),
+    ("svm", bdcd_svm, dict(block_size=2, s=1)),
+    ("svm", sa_bdcd_svm, dict(block_size=2, s=8)),
+    ("ksvm", kbdcd_svm, dict(block_size=2, s=1)),
+    ("ksvm", sa_kbdcd_svm, dict(block_size=2, s=8)),
+    ("logreg", bcd_logreg, dict(block_size=2, s=1)),
+    ("logreg", sa_bcd_logreg, dict(block_size=2, s=8)),
+]
+
+
+@pytest.mark.parametrize("family,legacy,cfg_kw",
+                         LOCAL_CASES,
+                         ids=[f"{f}-{fn.__name__}"
+                              for f, fn, _ in LOCAL_CASES])
+def test_legacy_shims_bit_identical_local(lasso_data, svm_data, family,
+                                          legacy, cfg_kw):
+    prob = _problems(lasso_data, svm_data)[family]
+    cfg = SolverConfig(iterations=24, **cfg_kw)
+    ref = legacy(prob, cfg)
+    res = api.solve(prob, cfg)
+    assert np.array_equal(np.asarray(ref.x), np.asarray(res.x))
+    assert np.array_equal(np.asarray(ref.objective),
+                          np.asarray(res.objective))
+
+
+def test_family_resolution_by_problem_type(lasso_data, svm_data):
+    for name, prob in _problems(lasso_data, svm_data).items():
+        assert api.resolve_family(prob).name == name
+
+
+def test_registry_has_all_four_families():
+    assert {"lasso", "svm", "ksvm", "logreg"} <= set(FAMILIES)
+    assert api.families() == tuple(sorted(FAMILIES))
+
+
+# ---------------------------------------------------------------------------
+# 1b. shim equivalence, sharded backend (8 placeholder devices, one
+# subprocess covering one case per family).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_legacy_shims_bit_identical_sharded():
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from repro import api
+from repro.api import (LassoProblem, LogRegProblem, SVMProblem,
+                       SolverConfig)
+from repro.core import solve_lasso_sharded, solve_svm_sharded
+
+mesh_d = jax.make_mesh((8,), ("data",))
+mesh_m = jax.make_mesh((8,), ("model",))
+rng = np.random.default_rng(3)
+m, n = 130, 40
+A = rng.standard_normal((m, n)).astype(np.float32)
+xt = np.zeros(n, np.float32); xt[:5] = 1.0
+b = (A @ xt + 0.1 * rng.standard_normal(m)).astype(np.float32)
+lam = 0.1 * float(np.abs(A.T @ b).max())
+# planted separable-ish labels: logreg's SGD-style steps need signal to
+# descend (pure-noise labels put the optimum at w ~ 0).
+wt = rng.standard_normal(n).astype(np.float32)
+bs = np.sign(A @ wt + 0.1 * rng.standard_normal(m)).astype(np.float32)
+bs[bs == 0] = 1.0
+
+cfg = SolverConfig(block_size=2, iterations=16, s=4)
+cases = [
+    (LassoProblem(A=A, b=b, lam=lam),
+     lambda p: solve_lasso_sharded(p, cfg, mesh_d), mesh_d),
+    (SVMProblem(A=A, b=bs, lam=1.0),
+     lambda p: solve_svm_sharded(p, cfg, mesh_m), mesh_m),
+    (SVMProblem(A=A, b=bs, lam=1.0, kernel="rbf",
+                kernel_params={"gamma": 0.1}),
+     lambda p: solve_svm_sharded(p, cfg, mesh_m), mesh_m),
+]
+for prob, legacy, mesh in cases:
+    ref = legacy(prob)
+    res = api.solve(prob, cfg, backend="sharded", mesh=mesh)
+    assert np.array_equal(np.asarray(ref.x), np.asarray(res.x))
+    assert np.array_equal(np.asarray(ref.objective),
+                          np.asarray(res.objective))
+    # and the sharded trajectory matches the local one
+    loc = api.solve(prob, cfg)
+    o1, o2 = np.asarray(loc.objective), np.asarray(res.objective)
+    assert np.max(np.abs(o1 - o2) / np.maximum(np.abs(o1), 1e-9)) < 1e-4
+
+# logreg has NO legacy sharded entry point — the whole point: it reaches
+# the generic driver by registration alone (and exercises the
+# x0_layout="partition" warm-start padding path).
+prob = LogRegProblem(A=A, b=bs, lam=1e-3)
+loc = api.solve(prob, cfg)
+res = api.solve(prob, cfg, backend="sharded", mesh=mesh_m)
+o1, o2 = np.asarray(loc.objective), np.asarray(res.objective)
+assert np.max(np.abs(o1 - o2) / np.abs(o1)) < 1e-4
+assert res.x.shape == (n,) and res.aux["margins"].shape == (m,)
+warm = api.solve(prob, cfg, backend="sharded", mesh=mesh_m,
+                 x0=np.asarray(res.x))
+# resumes at the cold solve's final objective (stochastic steps may
+# fluctuate afterwards, but never climb back toward the cold start).
+assert abs(float(warm.objective[0]) - float(res.objective[-1])) \
+    < 0.02 * abs(float(res.objective[-1]))
+assert float(warm.objective[-1]) < float(res.objective[0])
+print("SHARDED_SHIMS_OK")
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    assert "SHARDED_SHIMS_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# 2. registry round-trip + error messages.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _ToyProblem:
+    A: object
+    b: object
+
+
+def test_register_family_roundtrip():
+    from repro.core.types import SolverResult
+
+    def toy_solve(problem, cfg, axis_name=None, x0=None):
+        x = np.zeros(np.asarray(problem.A).shape[1]) if x0 is None \
+            else np.asarray(x0)
+        return SolverResult(x=x, objective=np.zeros(cfg.iterations),
+                            aux={"tag": "toy"})
+
+    deco = register_family(
+        "toy", problem_cls=_ToyProblem, partition="row",
+        default_axes="data",
+        variants={"classical": "tests.test_api:_missing"})
+    try:
+        deco(toy_solve)
+        assert "toy" in FAMILIES
+        prob = _ToyProblem(A=np.ones((4, 3)), b=np.ones(4))
+        # type-inferred dispatch reaches the toy solver
+        res = api.solve(prob, SolverConfig(iterations=5))
+        assert res.aux["tag"] == "toy" and res.x.shape == (3,)
+        # x0 threads through
+        res = api.solve(prob, SolverConfig(iterations=5), x0=np.ones(3))
+        assert np.array_equal(res.x, np.ones(3))
+        # duplicate registration is rejected with the registered names
+        with pytest.raises(ValueError, match="already registered"):
+            register_family("toy", problem_cls=_ToyProblem,
+                            variants={})(toy_solve)
+        # unknown variant error lists the registered variants
+        with pytest.raises(ValueError, match="classical"):
+            FAMILIES["toy"].variant("nope")
+    finally:
+        FAMILIES.pop("toy", None)
+
+
+def test_unknown_family_error_lists_registered():
+    with pytest.raises(ValueError) as ei:
+        api.resolve_family(family="nope")
+    for name in ("lasso", "svm", "ksvm", "logreg"):
+        assert name in str(ei.value)
+
+
+def test_unmatched_problem_error_lists_registered():
+    with pytest.raises(ValueError, match="no registered problem family"):
+        api.resolve_family(problem=object())
+
+
+def test_unknown_backend_error_lists_registered(lasso_data):
+    A, b, lam = lasso_data
+    with pytest.raises(ValueError) as ei:
+        api.solve(LassoProblem(A=A, b=b, lam=lam), SolverConfig(),
+                  backend="tpu-pod")
+    assert "local" in str(ei.value) and "sharded" in str(ei.value)
+
+
+def test_sharded_backend_requires_mesh(lasso_data):
+    A, b, lam = lasso_data
+    with pytest.raises(ValueError, match="mesh"):
+        api.solve(LassoProblem(A=A, b=b, lam=lam), SolverConfig(),
+                  backend="sharded")
+
+
+def test_invalid_family_fields_rejected():
+    with pytest.raises(ValueError, match="partition"):
+        ProblemFamily(name="bad", problem_cls=_ToyProblem, solve=None,
+                      variants={}, partition="diagonal")
+    with pytest.raises(ValueError, match="x0_layout"):
+        ProblemFamily(name="bad", problem_cls=_ToyProblem, solve=None,
+                      variants={}, x0_layout="sideways")
+
+
+def test_callbacks_run_after_solve(lasso_data):
+    A, b, lam = lasso_data
+    seen = []
+    res = api.solve(LassoProblem(A=A, b=b, lam=lam),
+                    SolverConfig(iterations=5),
+                    callbacks=[seen.append])
+    assert seen == [res]
+
+
+# ---------------------------------------------------------------------------
+# 2b. the mu = 1 aliases reject blocked configs loudly (ValueError, not
+# a stripped-under-``python -O`` assert).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("alias", [cd_lasso, acc_cd_lasso, sa_cd_lasso,
+                                   sa_acc_cd_lasso, dcd_svm, sa_svm],
+                         ids=lambda f: f.__name__)
+def test_unit_block_aliases_raise_on_blocked_config(lasso_data, svm_data,
+                                                    alias):
+    if "lasso" in alias.__name__:
+        A, b, lam = lasso_data
+        prob = LassoProblem(A=A, b=b, lam=lam)
+    else:
+        A, b = svm_data
+        prob = SVMProblem(A=A, b=b, lam=1.0)
+    with pytest.raises(ValueError, match="block_size"):
+        alias(prob, SolverConfig(block_size=2, iterations=4))
+
+
+# ---------------------------------------------------------------------------
+# 3. warm start: a second solve resumes at the first's final objective.
+# ---------------------------------------------------------------------------
+
+def _warm_start_case(prob, cfg):
+    first = api.solve(prob, cfg)
+    second = api.solve(prob, cfg, x0=np.asarray(first.x))
+    o1 = np.asarray(first.objective)
+    o2 = np.asarray(second.objective)
+    # the second trace RESUMES: its first point continues from the first
+    # solve's final objective (one further step applied), and it never
+    # climbs back toward the cold-start values.
+    scale = max(abs(float(o1[-1])), 1e-6)
+    assert abs(float(o2[0]) - float(o1[-1])) / scale < 0.05, (o1[-1], o2[0])
+    assert float(o2[-1]) <= float(o1[-1]) + 1e-5 * scale
+    return o1, o2
+
+
+@pytest.mark.parametrize("variant_cfg", [dict(s=1), dict(s=6)],
+                         ids=["classical", "sa"])
+def test_warm_start_resumes_lasso(lasso_data, variant_cfg):
+    A, b, lam = lasso_data
+    prob = LassoProblem(A=A, b=b, lam=lam)
+    cfg = SolverConfig(block_size=4, iterations=30, accelerated=False,
+                       **variant_cfg)
+    o1, o2 = _warm_start_case(prob, cfg)
+    assert float(o2[-1]) < float(np.asarray(o1)[0])
+
+
+@pytest.mark.parametrize("kernel", ["linear", "rbf"])
+def test_warm_start_resumes_svm_dual(svm_data, kernel):
+    """alpha0 != 0 resumes the incremental dual trace at f_D(alpha0)
+    (regression: it used to restart at 0, discontinuous)."""
+    A, b = svm_data
+    params = {"gamma": 0.1} if kernel == "rbf" else None
+    prob = SVMProblem(A=A, b=b, lam=1.0, kernel=kernel,
+                      kernel_params=params)
+    cfg = SolverConfig(block_size=2, iterations=40, s=4)
+    first = api.solve(prob, cfg)
+    second = api.solve(prob, cfg, x0=np.asarray(first.aux["alpha"]))
+    o1, o2 = np.asarray(first.objective), np.asarray(second.objective)
+    scale = max(abs(float(o1[-1])), 1e-6)
+    assert abs(float(o2[0]) - float(o1[-1])) / scale < 0.05
+    assert float(o2[-1]) <= float(o1[-1]) + 1e-4 * scale
+
+
+def test_warm_start_resumes_logreg(svm_data):
+    A, b = svm_data
+    prob = LogRegProblem(A=A, b=b, lam=1e-3)
+    cfg = SolverConfig(block_size=2, iterations=40, s=5)
+    _warm_start_case(prob, cfg)
+
+
+# ---------------------------------------------------------------------------
+# tooling: the checked-in API surface matches the live modules, and the
+# registry-driven CLI runs once per family.
+# ---------------------------------------------------------------------------
+
+def test_api_surface_matches_checked_in():
+    script = os.path.join(ROOT, "tools", "check_api_surface.py")
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, script], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, (out.stdout, out.stderr)
+
+
+@pytest.mark.parametrize("family", ["lasso", "svm", "ksvm", "logreg"])
+def test_cli_smoke_per_family(family):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.solve", "--problem", family,
+         "--iterations", "4", "--s", "2", "--dataset", "w1a-like"],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, (out.stdout, out.stderr)
+    assert family.split("-")[0] in out.stdout

@@ -83,6 +83,35 @@ def test_kernel_svm_costs():
                        kernel="rbf") == pytest.approx(1.0)
 
 
+def test_logreg_costs():
+    """logreg moves the (m, s*mu) cross block (kernel-SVM message shape):
+    latency amortizes by s, bandwidth is flat in s, and the margin
+    update adds O(m mu) flops per inner iteration."""
+    from repro.core.cost_model import logreg_costs, logreg_speedup
+    c1 = logreg_costs(DIMS, H=512, mu=4, s=1, P=128)
+    c8 = logreg_costs(DIMS, H=512, mu=4, s=8, P=128)
+    assert c8["L"] == pytest.approx(c1["L"] / 8)
+    assert c8["W"] == pytest.approx(c1["W"])
+    assert c8["M"] > c1["M"]                       # s*mu*m replicated cross
+    assert logreg_speedup(DIMS, 100, 1, 64,
+                          Machine.cray_xc30()) == pytest.approx(1.0)
+    assert logreg_speedup(DIMS, 10_000, 32, 1024,
+                          Machine.cray_xc30()) > 1.0
+
+
+def test_family_cost_entries_follow_table1_shape():
+    """Every registered family exposes a cost-model entry with the
+    Table I keys and the s-fold latency reduction."""
+    from repro.core.types import FAMILIES
+    import repro.core.api  # noqa: F401  (populates FAMILIES)
+    for fam in FAMILIES.values():
+        assert fam.costs is not None, fam.name
+        c1 = fam.costs(DIMS, 512, 2, 1, 128)
+        c16 = fam.costs(DIMS, 512, 2, 16, 128)
+        assert {"F", "L", "W", "M"} <= set(c1)
+        assert c16["L"] == pytest.approx(c1["L"] / 16), fam.name
+
+
 def test_predicted_time_positive_and_additive():
     m = Machine.tpu_v5e_pod()
     c = lasso_costs(DIMS, H=256, mu=8, s=4, P=256)

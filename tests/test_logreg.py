@@ -1,0 +1,178 @@
+"""Logistic regression (BCD + SA-BCD, after arXiv:2011.08281): SA
+equivalence across (s, mu, lam), exact objective tracking from the
+maintained margins, remainder/collision handling, f64 machine-epsilon
+equivalence — the same hardening tier every other family gets."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (LogRegProblem, SolverConfig, bcd_logreg,
+                        logreg_objective, sa_bcd_logreg, solve_logreg)
+
+
+@pytest.fixture(scope="module")
+def logreg_data(svm_data):
+    """Planted separable-ish labels (the SVM fixture): logreg's
+    SGD-style steps need signal to descend."""
+    return svm_data
+
+
+def test_objective_decreases(logreg_data):
+    A, b = logreg_data
+    prob = LogRegProblem(A=A, b=b, lam=1e-3)
+    res = bcd_logreg(prob, SolverConfig(block_size=4, iterations=200))
+    obj = np.asarray(res.objective)
+    assert obj[0] < np.log(2.0)          # already below the w=0 value
+    assert obj[-1] < 0.75 * float(np.log(2.0))
+    assert obj[-1] < obj[0]
+
+
+def test_tracked_objective_matches_direct(logreg_data):
+    """The incrementally maintained (margins, ||w||^2) pair reproduces
+    the directly evaluated objective at the final iterate."""
+    A, b = logreg_data
+    prob = LogRegProblem(A=A, b=b, lam=1e-2)
+    res = bcd_logreg(prob, SolverConfig(block_size=4, iterations=64))
+    direct = float(logreg_objective(prob, res.x))
+    assert abs(float(res.objective[-1]) - direct) < 1e-5 * max(direct, 1.0)
+    # margins aux is exactly A @ w
+    np.testing.assert_allclose(np.asarray(res.aux["margins"]),
+                               np.asarray(prob.A) @ np.asarray(res.x),
+                               atol=1e-4)
+
+
+_BASE_CACHE = {}
+
+
+def _base(logreg_data, lam, mu, H):
+    key = (lam, mu, H)
+    if key not in _BASE_CACHE:
+        A, b = logreg_data
+        prob = LogRegProblem(A=A, b=b, lam=lam)
+        _BASE_CACHE[key] = bcd_logreg(
+            prob, SolverConfig(block_size=mu, iterations=H))
+    return _BASE_CACHE[key]
+
+
+@pytest.mark.parametrize("lam", [0.0, 1e-2])
+@pytest.mark.parametrize("mu", [1, 2, 4])
+@pytest.mark.parametrize("s", [1, 2, 4, 8])
+def test_sa_trajectory_matches(logreg_data, lam, mu, s):
+    """SA-BCD == BCD iterates across the full (s, mu, lam) sweep —
+    including lam > 0, which exercises the d = 1 - eta*lam decay
+    recurrence in the deferred updates."""
+    A, b = logreg_data
+    prob = LogRegProblem(A=A, b=b, lam=lam)
+    H = 32
+    base = _base(logreg_data, lam, mu, H)
+    sa = sa_bcd_logreg(prob, SolverConfig(block_size=mu, iterations=H, s=s))
+    o1, o2 = np.asarray(base.objective), np.asarray(sa.objective)
+    assert o1.shape == o2.shape == (H,)
+    np.testing.assert_allclose(o2, o1, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sa.x), np.asarray(base.x),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(sa.aux["margins"]),
+                               np.asarray(base.aux["margins"]), atol=1e-4)
+
+
+def test_sa_remainder_iterations(logreg_data):
+    """iterations % s != 0: floor(H/s) groups + one tail group, exactly H
+    inner iterations, trajectory matches inner-iteration-for-inner-
+    iteration (H < s degenerates to tail-only)."""
+    A, b = logreg_data
+    prob = LogRegProblem(A=A, b=b, lam=1e-3)
+    for H, s in ((10, 4), (3, 8)):
+        base = bcd_logreg(prob, SolverConfig(block_size=2, iterations=H))
+        sa = sa_bcd_logreg(prob, SolverConfig(block_size=2, iterations=H,
+                                              s=s))
+        o2 = np.asarray(sa.objective)
+        assert o2.shape == (H,)
+        np.testing.assert_allclose(o2, np.asarray(base.objective),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_sa_collisions_within_group():
+    """Tiny m forces repeated row indices across the s blocks of one
+    outer group: the single replicated margin copy must keep SA exact."""
+    import jax
+    from repro.core.linalg import sample_block
+
+    rng = np.random.default_rng(5)
+    m, n = 10, 24
+    A = rng.standard_normal((m, n)).astype(np.float32)
+    wt = rng.standard_normal(n).astype(np.float32)
+    b = np.sign(A @ wt).astype(np.float32)
+    b[b == 0] = 1.0
+    s, mu, H = 8, 2, 16
+    key = jax.random.key(0)
+    idxs = np.asarray(jax.vmap(
+        lambda h: sample_block(jax.random.fold_in(key, h), m, mu))(
+        np.arange(1, s + 1)))
+    assert len(np.unique(idxs)) < idxs.size
+    prob = LogRegProblem(A=A, b=b, lam=1e-2)
+    base = bcd_logreg(prob, SolverConfig(block_size=mu, iterations=H))
+    sa = sa_bcd_logreg(prob, SolverConfig(block_size=mu, iterations=H, s=s))
+    np.testing.assert_allclose(np.asarray(sa.objective),
+                               np.asarray(base.objective),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sa.x), np.asarray(base.x),
+                               atol=2e-5)
+
+
+def test_dispatch_solve_logreg(logreg_data):
+    """solve_logreg routes on cfg.s; cfg.accelerated is ignored (no
+    accelerated variant, as for SVM)."""
+    A, b = logreg_data
+    prob = LogRegProblem(A=A, b=b, lam=1e-3)
+    for s in (1, 4):
+        for accelerated in (False, True):
+            cfg = SolverConfig(block_size=2, iterations=12, s=s,
+                               accelerated=accelerated)
+            res = solve_logreg(prob, cfg)
+            assert np.asarray(res.objective).shape == (12,)
+
+
+@pytest.mark.slow
+def test_sa_final_error_f64():
+    """SA-BCD == BCD at machine-epsilon scale in f64 (Table III analogue
+    for logistic regression; acceptance bound 1e-10)."""
+    code = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from repro.core import LogRegProblem, SolverConfig, bcd_logreg, \
+    sa_bcd_logreg
+rng = np.random.default_rng(7)
+m, n = 96, 40
+A = rng.standard_normal((m, n))
+w = rng.standard_normal(n)
+b = np.sign(A @ w + 0.1 * rng.standard_normal(m)); b[b == 0] = 1.0
+worst = 0.0
+for lam in (0.0, 1e-2):
+    prob = LogRegProblem(A=A, b=b, lam=lam)
+    for mu in (1, 4):
+        base = bcd_logreg(prob, SolverConfig(block_size=mu, iterations=64,
+                                             dtype=jnp.float64))
+        for s in (8, 12):
+            sa = sa_bcd_logreg(prob, SolverConfig(
+                block_size=mu, iterations=64, s=s, dtype=jnp.float64))
+            o1 = np.asarray(base.objective); o2 = np.asarray(sa.objective)
+            dev = float(np.max(np.abs(o1 - o2)
+                               / np.maximum(np.abs(o1), 1e-30)))
+            xdev = float(np.max(np.abs(np.asarray(base.x)
+                                       - np.asarray(sa.x))))
+            worst = max(worst, dev, xdev)
+print("DEV", worst)
+assert worst < 1e-10, worst
+"""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    dev = float(out.stdout.split("DEV")[1].strip())
+    assert dev < 1e-10

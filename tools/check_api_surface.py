@@ -1,0 +1,84 @@
+#!/usr/bin/env python
+"""Public-API-surface check: diff the exported names of ``repro.core``
+and ``repro.api`` against the checked-in ``api_surface.txt``.
+
+    PYTHONPATH=src python tools/check_api_surface.py            # verify
+    PYTHONPATH=src python tools/check_api_surface.py --update   # regen
+
+Fails (exit 1) on any drift. Removals are the real hazard — a name
+vanishing from ``__all__`` silently breaks downstream callers — but
+additions also fail so the snapshot stays the reviewed source of truth;
+run with ``--update`` and commit the new file to bless a change.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SURFACE_FILE = os.path.join(ROOT, "api_surface.txt")
+MODULES = ("repro.core", "repro.api")
+
+
+def current_surface() -> list[str]:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    lines = []
+    for modname in MODULES:
+        mod = importlib.import_module(modname)
+        exported = getattr(mod, "__all__", None)
+        if not exported:
+            print(f"ERROR: {modname} defines no __all__", file=sys.stderr)
+            raise SystemExit(1)
+        missing = [n for n in exported if not hasattr(mod, n)]
+        if missing:
+            print(f"ERROR: {modname}.__all__ lists undefined names: "
+                  f"{missing}", file=sys.stderr)
+            raise SystemExit(1)
+        lines.extend(f"{modname}:{name}" for name in sorted(set(exported)))
+    return lines
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite api_surface.txt from the live modules")
+    args = ap.parse_args()
+
+    lines = current_surface()
+    if args.update:
+        with open(SURFACE_FILE, "w") as f:
+            f.write("\n".join(lines) + "\n")
+        print(f"wrote {len(lines)} names to {SURFACE_FILE}")
+        return 0
+
+    if not os.path.exists(SURFACE_FILE):
+        print(f"ERROR: {SURFACE_FILE} missing; run with --update",
+              file=sys.stderr)
+        return 1
+    with open(SURFACE_FILE) as f:
+        recorded = [ln.strip() for ln in f if ln.strip()]
+
+    removed = sorted(set(recorded) - set(lines))
+    added = sorted(set(lines) - set(recorded))
+    if removed:
+        print("ERROR: names REMOVED from the public API surface "
+              "(downstream callers would break silently):",
+              file=sys.stderr)
+        for name in removed:
+            print(f"  - {name}", file=sys.stderr)
+    if added:
+        print("ERROR: names added to the public API surface but not "
+              "recorded; bless them with --update and commit:",
+              file=sys.stderr)
+        for name in added:
+            print(f"  + {name}", file=sys.stderr)
+    if removed or added:
+        return 1
+    print(f"api surface OK ({len(lines)} names)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
