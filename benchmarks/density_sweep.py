@@ -1,0 +1,207 @@
+"""Density sweep: the sparse-operand execution path vs the dense path,
+and the cost model's density parameter f validated against EXECUTED
+flops. Writes ``results/perf/sparse.json`` plus the usual CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.density_sweep [--smoke]
+
+Two sections:
+
+* **sweep** — a fixed (m, n) Lasso shape at several densities: dense vs
+  sparse (SA-BCD, objective tracking off so the timed work is the
+  solver's data-dependent path), the executed sparse flops of the fused
+  Gram/projection product (counted EXACTLY from the operand's per-column
+  nnz and the solver's own block draws), and the cost model's
+  data-dependent flop term H mu^2 s f m. The model carries no leading
+  constant, so the validation is that executed / model is a CONSTANT
+  across densities (the model's f tracks executed work linearly) — the
+  per-density ratios land in the json.
+* **news20-like** — the paper regime this repo's headline depends on
+  (sparse, n >> m): end-to-end dense vs sparse wall-clock through
+  ``repro.api.solve`` for Lasso and logreg; the acceptance bar is a
+  measured sparse-path win (speedup > 1).
+
+``--smoke`` shrinks shapes/iterations for CI and additionally runs the
+blocked-ELL Pallas kernel in interpret mode against its jnp oracle
+(the sparse path's kernel-level parity gate on CPU runners).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import emit, header, timeit
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.api import LassoProblem, LogRegProblem, SolverConfig
+from repro.core import linalg
+from repro.core.cost_model import ProblemDims, lasso_costs
+from repro.core.types import SparseOperand
+from repro.data.sparse import _sparse_matrix, make_lasso_dataset, \
+    make_svm_dataset
+from repro.kernels import spmm
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "perf", "sparse.json")
+
+
+def _lasso_problem(rng, m, n, density):
+    A = _sparse_matrix(rng, m, n, density)
+    x_true = np.zeros(n, np.float32)
+    x_true[:16] = rng.standard_normal(16).astype(np.float32)
+    b = (A @ x_true + 0.1 * rng.standard_normal(m)).astype(np.float32)
+    lam = 0.1 * float(np.abs(A.T @ b).max())
+    return A, b, lam
+
+
+def _executed_gram_flops(op: SparseOperand, cfg: SolverConfig) -> float:
+    """EXACT multiply-add count of the sparse fused Gram/projection
+    products the SA-BCD Lasso solve executes: replay the solver's own
+    block draws (same key / fold_in ids) and charge each outer group
+    2 * (group_cols + 1) * nnz(sampled columns) — each stored nonzero
+    meets every column of [Y | r] once."""
+    col_nnz = (np.asarray(op.col_vals) != 0).sum(axis=1)
+    n = op.shape[1]
+    key = jax.random.key(cfg.seed)
+    draws = jax.vmap(
+        lambda h: linalg.sample_block(jax.random.fold_in(key, h), n,
+                                      cfg.block_size))(
+        jnp.arange(1, cfg.iterations + 1))
+    draws = np.asarray(draws)                       # (H, mu)
+    full, rem = divmod(cfg.iterations, cfg.s)
+    flops = 0.0
+    for g in range(full + (1 if rem else 0)):
+        s_grp = cfg.s if g < full else rem
+        cols = draws[g * cfg.s:g * cfg.s + s_grp].reshape(-1)
+        flops += 2.0 * (cols.size + 1) * float(col_nnz[cols].sum())
+    return flops
+
+
+def _solve_pair(A, op, b, problem_fn, cfg, repeats=3):
+    """(dense_us, sparse_us) steady-state execution times for one
+    problem through ``repro.api.solve``. Each path is jitted ONCE (the
+    operand is a pytree, so it passes straight through jit) — the first
+    ``timeit`` call is the compile warmup, the timed repeats measure the
+    solve itself, which is what the SA trade-off is about."""
+    def run(mat):
+        fn = jax.jit(lambda a, bb: api.solve(problem_fn(a, bb), cfg).x)
+        us, _ = timeit(
+            lambda: jax.block_until_ready(fn(mat, jnp.asarray(b))),
+            repeats=repeats)
+        return us
+
+    return run(jnp.asarray(A)), run(op)
+
+
+def density_sweep(m=1024, n=4096, H=192, s=16, mu=8,
+                  densities=(0.002, 0.01, 0.05, 0.2)):
+    rng = np.random.default_rng(0)
+    cfg = SolverConfig(block_size=mu, s=s, iterations=H,
+                       accelerated=False, track_objective=False)
+    rows = []
+    for f in densities:
+        A, b, lam = _lasso_problem(rng, m, n, f)
+        op = SparseOperand.from_dense(A)
+        us_d, us_s = _solve_pair(
+            A, op, b, lambda a, bb: LassoProblem(A=a, b=bb, lam=lam), cfg)
+        executed = _executed_gram_flops(op, cfg)
+        dims = ProblemDims(m=m, n=n, f=op.nnz / (m * n))
+        # the model's data-dependent term only (the H mu^3 subproblem
+        # flops are density-independent and identical on both paths).
+        model = lasso_costs(dims, H, mu, s, 1)["F"] - H * mu ** 3
+        row = {"density": float(f), "m": m, "n": n, "nnz": op.nnz,
+               "H": H, "s": s, "mu": mu,
+               "dense_us": us_d, "sparse_us": us_s,
+               "speedup": us_d / us_s,
+               "executed_gram_flops": executed,
+               "model_data_flops": model,
+               "executed_over_model": executed / model}
+        rows.append(row)
+        emit(f"density/{f:g}", us_s,
+             f"dense_us={us_d:.0f};speedup={row['speedup']:.2f};"
+             f"exec_over_model={row['executed_over_model']:.3f}")
+    return rows
+
+
+def news20_like(H=192, s=16, mu=8, iterations_logreg=128):
+    """End-to-end dense vs sparse on the news20-like regime (the paper's
+    sparsest Lasso dataset shape: n >> m, f ~ 1e-3)."""
+    out = {}
+    cfg = SolverConfig(block_size=mu, s=s, iterations=H,
+                       accelerated=False, track_objective=False)
+    A, b, lam = make_lasso_dataset("news20-like", seed=0)
+    opA, _, _ = make_lasso_dataset("news20-like", seed=0, as_operand=True)
+    us_d, us_s = _solve_pair(
+        A, opA, b, lambda a, bb: LassoProblem(A=a, b=bb, lam=lam), cfg)
+    out["lasso"] = {"dense_us": us_d, "sparse_us": us_s,
+                    "speedup": us_d / us_s}
+    emit("news20-like/lasso", us_s,
+         f"dense_us={us_d:.0f};speedup={us_d / us_s:.2f}")
+
+    cfg_lr = SolverConfig(block_size=mu, s=s,
+                          iterations=iterations_logreg,
+                          track_objective=False)
+    As, bs = make_svm_dataset("news20-like", seed=0)
+    opS, _ = make_svm_dataset("news20-like", seed=0, as_operand=True)
+    us_d, us_s = _solve_pair(
+        As, opS, bs,
+        lambda a, bb: LogRegProblem(A=a, b=bb, lam=1e-3), cfg_lr)
+    out["logreg"] = {"dense_us": us_d, "sparse_us": us_s,
+                     "speedup": us_d / us_s}
+    emit("news20-like/logreg", us_s,
+         f"dense_us={us_d:.0f};speedup={us_d / us_s:.2f}")
+    return out
+
+
+def interpret_parity():
+    """Blocked-ELL Pallas kernel (interpret mode) vs the jnp oracle —
+    the CI gate for the sparse hot path on CPU runners."""
+    rng = np.random.default_rng(1)
+    A = rng.standard_normal((96, 64)).astype(np.float32)
+    A[rng.random(A.shape) < 0.9] = 0.0
+    op = SparseOperand.from_dense(A)
+    D = rng.standard_normal((64, 24)).astype(np.float32)
+    ref = np.asarray(spmm.ell_spmm(op.row_vals, op.row_cols,
+                                   op.row_blocks, jnp.asarray(D),
+                                   ell_block=op.ell_block))
+    pal = np.asarray(spmm.ell_spmm(op.row_vals, op.row_cols,
+                                   op.row_blocks, jnp.asarray(D),
+                                   ell_block=op.ell_block,
+                                   interpret=True))
+    err = float(np.max(np.abs(ref - pal)))
+    emit("interpret_parity/ell_spmm", 0.0, f"max_err={err:.2e}")
+    assert err < 1e-4, f"pallas interpret parity failed: {err}"
+    assert np.allclose(ref, A @ D, atol=1e-4)
+    return err
+
+
+def main(smoke: bool = False):
+    if smoke:
+        rows = density_sweep(m=192, n=384, H=48, s=8, mu=4,
+                             densities=(0.01, 0.1))
+        news = news20_like(H=48, s=8, mu=8, iterations_logreg=24)
+        err = interpret_parity()
+    else:
+        rows = density_sweep()
+        news = news20_like()
+        err = interpret_parity()
+    payload = {"sweep": rows, "news20-like": news,
+               "interpret_parity_max_err": err,
+               "smoke": smoke}
+    with open(OUT_PATH, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    print(f"wrote {os.path.normpath(OUT_PATH)}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes + interpret-mode parity (CI)")
+    args = ap.parse_args()
+    header()
+    main(smoke=args.smoke)

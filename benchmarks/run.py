@@ -14,8 +14,9 @@ SECTIONS = {}
 
 def _register():
     from benchmarks import paper_lasso, paper_svm, collective_count, \
-        roofline_bench
+        density_sweep, roofline_bench
     SECTIONS.update({
+        "density": density_sweep.main,
         "fig2": paper_lasso.fig2_convergence,
         "table3": paper_lasso.table3_relative_error,
         "fig3": paper_lasso.fig3_runtime,

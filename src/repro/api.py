@@ -19,7 +19,7 @@ from repro.core.api import (BACKENDS, families, lower_solve,
                             resolve_family, solve, solve_sharded)
 from repro.core.types import (FAMILIES, KERNELS, KernelSpec, LassoProblem,
                               LogRegProblem, ProblemFamily, SVMProblem,
-                              SolverConfig, SolverResult,
+                              SolverConfig, SolverResult, SparseOperand,
                               build_kernel_params, register_family,
                               register_kernel)
 
@@ -32,5 +32,5 @@ __all__ = [
     "KERNELS", "KernelSpec", "register_kernel", "build_kernel_params",
     # problem / config / result types
     "LassoProblem", "SVMProblem", "LogRegProblem",
-    "SolverConfig", "SolverResult",
+    "SolverConfig", "SolverResult", "SparseOperand",
 ]

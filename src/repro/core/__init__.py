@@ -13,7 +13,7 @@ through one registry-driven ``solve`` call):
 """
 from repro.core.types import (FAMILIES, KERNELS, KernelSpec, LassoProblem,
                               LogRegProblem, ProblemFamily, SVMProblem,
-                              SolverConfig, SolverResult,
+                              SolverConfig, SolverResult, SparseOperand,
                               build_kernel_params, register_family,
                               register_kernel, require_unit_block)
 from repro.core.lasso import (acc_bcd_lasso, acc_cd_lasso, bcd_lasso,
@@ -34,7 +34,7 @@ __all__ = [
     "KERNELS", "KernelSpec", "register_kernel", "build_kernel_params",
     "require_unit_block",
     "LassoProblem", "SVMProblem", "LogRegProblem",
-    "SolverConfig", "SolverResult",
+    "SolverConfig", "SolverResult", "SparseOperand",
     "acc_bcd_lasso", "acc_cd_lasso", "bcd_lasso", "cd_lasso", "solve_lasso",
     "lasso_objective",
     "sa_acc_bcd_lasso", "sa_acc_cd_lasso", "sa_bcd_lasso", "sa_cd_lasso",

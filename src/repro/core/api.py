@@ -32,7 +32,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.types import (FAMILIES, ProblemFamily, SolverConfig,
-                              SolverResult)
+                              SolverResult, SparseOperand)
 
 # Importing the family modules is what populates FAMILIES: each family
 # self-registers from its own module (the ``KERNELS`` pattern). A new
@@ -99,6 +99,57 @@ def _axis_size(mesh: Mesh, axes: AxisNames) -> int:
     return int(np.prod([mesh.shape[a] for a in axes]))
 
 
+def _stack_sparse_shards(op: SparseOperand, n_shards: int, part_axis: int,
+                         padded: int, dtype) -> SparseOperand:
+    """Split a SparseOperand into per-shard operands along the partition
+    axis and stack their blocked-ELL leaves with a leading shard axis —
+    the form ``shard_map`` partitions with a single leading-axis spec.
+
+    Zero-padding the partitioned axis is exact: padded rows/columns
+    store no nonzeros (zero ELL blocks), so they contribute nothing to
+    any Gram/cross product and the corresponding state coordinates stay
+    0. Per-shard ELL arrays are rebuilt so indices are shard-LOCAL, with
+    widths padded to the max across shards (uniform leaves); the BCOO
+    form does not cross shard_map (dropped — ``squeeze_shard`` inside
+    rebuilds a pure-ELL local operand).
+    """
+    from repro.core.types import ell_width
+
+    m, n = op.shape
+    rows, cols, vals = op.host_coo()
+    vals = vals.astype(np.dtype(dtype) if dtype is not None else vals.dtype)
+    size = padded // n_shards
+    part = rows if part_axis == 0 else cols
+    loc_shape = (size, n) if part_axis == 0 else (m, size)
+    pieces = []
+    for k in range(n_shards):
+        sel = (part >= k * size) & (part < (k + 1) * size)
+        r = rows[sel] - (k * size if part_axis == 0 else 0)
+        c = cols[sel] - (k * size if part_axis == 1 else 0)
+        pieces.append((r, c, vals[sel]))
+    # uniform leaf widths across shards (so the stack is rectangular):
+    # the max per-row/column count over all shards, block-rounded.
+    rw = ell_width(max((np.bincount(r, minlength=loc_shape[0]).max()
+                        if r.size else 0) for r, _, _ in pieces),
+                   op.ell_block)
+    cw = ell_width(max((np.bincount(c, minlength=loc_shape[1]).max()
+                        if c.size else 0) for _, c, _ in pieces),
+                   op.ell_block)
+    built = [SparseOperand.from_coo(r, c, v, loc_shape,
+                                    ell_block=op.ell_block,
+                                    row_width=rw, col_width=cw)
+             for r, c, v in pieces]
+
+    def stack(get):
+        return jnp.stack([get(o) for o in built])
+
+    return SparseOperand(
+        stack(lambda o: o.row_cols), stack(lambda o: o.row_vals),
+        stack(lambda o: o.row_blocks), stack(lambda o: o.col_rows),
+        stack(lambda o: o.col_vals), stack(lambda o: o.col_blocks),
+        None, op.ell_block)
+
+
 def _specs(fam: ProblemFamily, axes: AxisNames):
     """PartitionSpecs implied by the family's partition axis: the sharded
     vector spec, A's spec, b's spec, and the solution's output spec."""
@@ -122,7 +173,9 @@ def solve_sharded(problem, cfg: SolverConfig, mesh: Mesh,
     Pads the partitioned axis of A to a multiple of the shard count
     (zero padding is exact for every family — padded rows/columns
     contribute 0 to every Gram/cross product and the corresponding
-    state coordinates stay 0), runs the family's own solver inside
+    state coordinates stay 0; a ``SparseOperand`` A is split into
+    per-shard operands whose padded rows/columns store no nonzeros at
+    all — see ``_stack_sparse_shards``), runs the family's own solver inside
     ``shard_map`` with ``axis_name=axes``, and unpads the outputs. The
     whole solve jits to ONE compiled program whose HLO carries exactly
     ceil(H/s) all-reduces — see ``benchmarks/collective_count.py``.
@@ -134,11 +187,16 @@ def solve_sharded(problem, cfg: SolverConfig, mesh: Mesh,
     if axes is None:
         axes = fam.default_axes
     n_shards = _axis_size(mesh, axes)
-    A = np.asarray(problem.A)
+    sparse = isinstance(problem.A, SparseOperand)
     part_axis = 0 if fam.partition == "row" else 1
-    orig = A.shape[part_axis]
+    orig = problem.A.shape[part_axis]
     padded = -(-orig // n_shards) * n_shards
-    A = _pad_to(A, padded, part_axis)
+    if sparse:
+        A_arg = _stack_sparse_shards(problem.A, n_shards, part_axis,
+                                     padded, cfg.dtype)
+    else:
+        A_arg = jnp.asarray(
+            _pad_to(np.asarray(problem.A), padded, part_axis), cfg.dtype)
     b = np.asarray(problem.b)
     if fam.partition == "row":
         b = _pad_to(b, padded, 0)
@@ -146,8 +204,10 @@ def solve_sharded(problem, cfg: SolverConfig, mesh: Mesh,
     vec, a_spec, b_spec, x_out = _specs(fam, axes)
     aux_specs = tuple(vec if layout == "partition" else P()
                       for _, layout in fam.aux_out)
-    in_specs = [a_spec, b_spec]
-    args = [jnp.asarray(A, cfg.dtype), jnp.asarray(b, cfg.dtype)]
+    # a sparse operand's leaves all carry a leading stacked-shard axis,
+    # so ONE leading-axis spec partitions the whole pytree.
+    in_specs = [vec if sparse else a_spec, b_spec]
+    args = [A_arg, jnp.asarray(b, cfg.dtype)]
     if x0 is not None:
         x0 = np.asarray(x0)
         if fam.x0_layout == "partition":
@@ -158,6 +218,8 @@ def solve_sharded(problem, cfg: SolverConfig, mesh: Mesh,
         args.append(jnp.asarray(x0, cfg.dtype))
 
     def local_solve(A_loc, b_loc, *x0_loc):
+        if sparse:
+            A_loc = A_loc.squeeze_shard()
         local = dataclasses.replace(problem, A=A_loc, b=b_loc)
         res = fam.solve(local, cfg, axis_name=axes,
                         x0=x0_loc[0] if x0_loc else None)

@@ -178,10 +178,25 @@ def best_s(dims: ProblemDims, H: int, mu: int, P: int, machine: Machine,
     The existence of an interior optimum (speedup rises with s while
     latency dominates, then falls once the s*mu^2 bandwidth/flop terms take
     over) reproduces the qualitative shape of paper Fig. 4e-h.
+
+    kind selects the cost formula: "lasso" (Table I), "svm" (the
+    (SA-)(K-)BDCD analogue; ``kernel`` selects the message/flop regime),
+    or "logreg" (the CA-logistic-regression regime). Unknown kinds raise
+    — historically anything that wasn't "lasso" was silently modeled
+    with the SVM formula, so kind="logreg" returned SVM speedups.
     """
-    fn = (lambda s: lasso_speedup(dims, H, mu, s, P, machine)) \
-        if kind == "lasso" \
-        else (lambda s: svm_speedup(dims, H, s, P, machine, mu, kernel))
+    if kind == "lasso":
+        def fn(s):
+            return lasso_speedup(dims, H, mu, s, P, machine)
+    elif kind == "svm":
+        def fn(s):
+            return svm_speedup(dims, H, s, P, machine, mu, kernel)
+    elif kind == "logreg":
+        def fn(s):
+            return logreg_speedup(dims, H, s, P, machine, mu)
+    else:
+        raise ValueError(
+            f"unknown kind {kind!r}; known: 'lasso', 'svm', 'logreg'")
     best = max(candidates, key=fn)
     return best, fn(best)
 

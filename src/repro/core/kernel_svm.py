@@ -53,30 +53,67 @@ import jax.numpy as jnp
 
 from repro.core import cost_model, linalg
 from repro.core.sa_loop import grouped_impl_label, run_grouped
+from repro.core.sparse_exec import (cross_block, prep_operand,
+                                    row_block_ops, spmm_aux)
 from repro.core.types import (SVMProblem, SolverConfig, SolverResult,
-                              register_family)
+                              SparseOperand, register_family)
+from repro.kernels import spmm
 from repro.kernels.svm_inner import inner_impl, svm_inner_loop
 
 
 def _local_norms(A, needs_norms: bool):
     """(m, 1) local partial squared row norms (loop-invariant — computed
     ONCE per solve and re-fused into every iteration's Allreduce), or
-    None for kernels that don't need them."""
-    return jnp.sum(A * A, axis=1, keepdims=True) if needs_norms else None
+    None for kernels that don't need them. Sparse operands sum their
+    stored row values (O(nnz))."""
+    if not needs_norms:
+        return None
+    if isinstance(A, SparseOperand):
+        return jnp.sum(A.row_vals * A.row_vals, axis=1, keepdims=True)
+    return jnp.sum(A * A, axis=1, keepdims=True)
 
 
-def _cross_and_norms(A, Y, axis_name, norms_local):
-    """ONE fused Allreduce of  [A Y^T | rownorms]:  the (m, c) linear
-    cross products between every data point and the c sampled rows, plus
-    (when the kernel needs them) the precomputed squared-row-norms column
-    — keeping the solver at exactly one Allreduce per (outer) iteration
-    with no setup collective."""
-    local = A @ Y.T                                       # (m, c) partial
+def _reduce_cross(local, axis_name, norms_local):
+    """ONE fused Allreduce of the LOCAL cross block ``[local | norms]``
+    (the norms column rides along only when the kernel needs it)."""
     if norms_local is None:
         return linalg.preduce(local, axis_name), None
     red = linalg.preduce(
         jnp.concatenate([local, norms_local], axis=1), axis_name)
     return red[:, :-1], red[:, -1]
+
+
+def _cross_and_norms(A, YT, axis_name, norms_local, use_pallas=False):
+    """ONE fused Allreduce of  [A Y^T | rownorms]:  the (m, c) linear
+    cross products between every data point and the c sampled rows
+    (``YT`` is the densified (n_loc, c) sample), plus (when the kernel
+    needs them) the precomputed squared-row-norms column — keeping the
+    solver at exactly one Allreduce per (outer) iteration with no setup
+    collective. A sparse A contracts its row-major blocked-ELL arrays
+    (``repro.kernels.spmm``): O(nnz * c) local flops."""
+    return _reduce_cross(cross_block(A, YT, use_pallas), axis_name,
+                         norms_local)
+
+
+def _full_cross_local(A):
+    """LOCAL  A A^T  (m, m) for the warm-start residual rebuild. A
+    sparse A never materializes the (n_loc, m) dense transpose: the
+    densified right operand is built a column-chunk at a time (chunk
+    sized to ~16 MB f32) and each chunk contracts through the ELL
+    arrays — peak extra memory O(n_loc * chunk), output (m, m) as the
+    kernel matrix requires anyway. Values are identical to the
+    unchunked product (each output entry is still one ELL row pass)."""
+    if not isinstance(A, SparseOperand):
+        return A @ A.T
+    m, n_loc = A.shape
+    chunk = int(max(1, min(m, (1 << 22) // max(n_loc, 1))))
+    pieces = []
+    for start in range(0, m, chunk):
+        idx = jnp.arange(start, min(start + chunk, m))
+        cols, vals, _ = A.gather_rows(idx)
+        pieces.append(cross_block(
+            A, spmm.scatter_dense(cols, vals, n_loc)))
+    return jnp.concatenate(pieces, axis=1)
 
 
 def _kernelize(problem: SVMProblem, cross, anorms, flat_idx, dtype):
@@ -93,12 +130,13 @@ def kernel_dual_objective(problem: SVMProblem, alpha,
     """f_D(alpha) = 1/2 (b a)^T K (b a) + gamma/2 ||a||^2 - e^T a,
     evaluated directly from the full m x m kernel matrix (diagnostic /
     test oracle — O(m^2) memory)."""
-    A = jnp.asarray(problem.A)
+    A = problem.A if isinstance(problem.A, SparseOperand) \
+        else jnp.asarray(problem.A)
     b = jnp.asarray(problem.b, A.dtype)
     alpha = jnp.asarray(alpha, A.dtype)
     spec = problem.kernel_spec
-    cross, anorms = _cross_and_norms(A, A, axis_name,
-                                     _local_norms(A, spec.needs_norms))
+    cross, anorms = _reduce_cross(_full_cross_local(A), axis_name,
+                                  _local_norms(A, spec.needs_norms))
     Kmat = spec.fn(cross, anorms, anorms, problem.kernel_params)
     ba = b * alpha
     return 0.5 * ba @ (Kmat @ ba) \
@@ -111,7 +149,7 @@ def _init_state(problem: SVMProblem, cfg: SolverConfig, axis_name,
     replicated dual residual f = K(A, A)(b alpha), and the starting dual
     objective f_D(alpha0) for the incremental trace. alpha0 = None starts
     at zero, where f, x and the dual are zero without any communication."""
-    A = jnp.asarray(problem.A, cfg.dtype)
+    A = prep_operand(problem.A, cfg.dtype)
     b = jnp.asarray(problem.b, cfg.dtype)
     m = A.shape[0]
     if alpha0 is None:
@@ -121,13 +159,13 @@ def _init_state(problem: SVMProblem, cfg: SolverConfig, axis_name,
         return A, b, alpha, x, f, jnp.asarray(0.0, cfg.dtype)
     alpha = jnp.asarray(alpha0, cfg.dtype)
     spec = problem.kernel_spec
-    cross, anorms = _cross_and_norms(A, A, axis_name,
-                                     _local_norms(A, spec.needs_norms))
+    cross, anorms = _reduce_cross(_full_cross_local(A), axis_name,
+                                  _local_norms(A, spec.needs_norms))
     Kmat = spec.fn(cross, anorms, anorms,
                    problem.kernel_params).astype(cfg.dtype)
     ba = b * alpha
     f = Kmat @ ba
-    x = A.T @ ba
+    x = A.rmatvec(ba) if isinstance(A, SparseOperand) else A.T @ ba
     # f_D(alpha0), reusing the f we just built: warm-started solves resume
     # the incremental dual trace where the previous solve left it.
     gamma = jnp.asarray(problem.gamma, cfg.dtype)
@@ -158,6 +196,7 @@ def kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
     nu = jnp.asarray(problem.nu, cfg.dtype)
     key = jax.random.key(cfg.seed)
     A, b, alpha, x, f, dual0 = _init_state(problem, cfg, axis_name, alpha0)
+    take, _, densify, apply_t = row_block_ops(A, cfg)
     norms_local = _local_norms(A, problem.kernel_spec.needs_norms)
     m = A.shape[0]
     eye_mu = jnp.eye(mu, dtype=cfg.dtype)
@@ -165,10 +204,11 @@ def kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
     def step(carry, h):
         alpha, x, f, dual = carry
         idx = linalg.sample_block(jax.random.fold_in(key, h), m, mu)
-        Y = A[idx]                                       # (mu, n_loc) local
+        Y = take(idx)                                    # (mu, n_loc) local
         b_B = b[idx]
         # --- Communication: ONE fused Allreduce of [A Y^T | norms] ---
-        cross, anorms = _cross_and_norms(A, Y, axis_name, norms_local)
+        cross, anorms = _cross_and_norms(A, densify(Y), axis_name,
+                                         norms_local, cfg.use_pallas)
         Kcol = _kernelize(problem, cross, anorms, idx, cfg.dtype)
         KBB = Kcol[idx] + gamma * eye_mu                 # (mu, mu)
         a_B = alpha[idx]
@@ -184,7 +224,7 @@ def kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
         alpha = alpha.at[idx].add(theta)
         bt = b_B * theta
         f = f + Kcol @ bt                                # replicated, local
-        x = x + Y.T @ bt                                 # primal shadow
+        x = x + apply_t(Y, bt)                           # primal shadow
         dual = dual + jnp.sum(theta * g) + 0.5 * bt @ (KBB @ bt)
         obj = dual if cfg.track_objective else jnp.asarray(0.0, cfg.dtype)
         return (alpha, x, f, dual), obj
@@ -192,7 +232,8 @@ def kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
     (alpha, x, f, dual), objs = jax.lax.scan(
         step, (alpha, x, f, dual0), jnp.arange(1, cfg.iterations + 1))
     return SolverResult(x=x, objective=objs,
-                        aux={"alpha": alpha, "dual": dual, "f": f})
+                        aux={"alpha": alpha, "dual": dual, "f": f,
+                             **spmm_aux(A, cfg, "cross")})
 
 
 def sa_kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
@@ -215,6 +256,7 @@ def sa_kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
     key = jax.random.key(cfg.seed)
     s, H = cfg.s, cfg.iterations
     A, b, alpha, x, f, dual0 = _init_state(problem, cfg, axis_name, alpha0)
+    take, _, densify, apply_t = row_block_ops(A, cfg)
     norms_local = _local_norms(A, problem.kernel_spec.needs_norms)
     m = A.shape[0]
 
@@ -225,10 +267,11 @@ def sa_kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
             lambda h: linalg.sample_block(jax.random.fold_in(key, h),
                                           m, mu))(hs)     # (s_grp, mu)
         flat = idxs.reshape(s_grp * mu)
-        Y = A[flat]                                       # (s_grp*mu, n_loc)
+        Y = take(flat)                                    # (s_grp*mu, n_loc)
         b_sel = b[flat].reshape(s_grp, mu)
         # --- Communication: ONE fused Allreduce of [A Y^T | norms] ---
-        cross, anorms = _cross_and_norms(A, Y, axis_name, norms_local)
+        cross, anorms = _cross_and_norms(A, densify(Y), axis_name,
+                                         norms_local, cfg.use_pallas)
         Kfull = _kernelize(problem, cross, anorms, flat, cfg.dtype)
         Kblock = Kfull[flat]                              # K(Y, Y)
         G = Kblock + gamma * jnp.eye(s_grp * mu, dtype=cfg.dtype)
@@ -242,7 +285,7 @@ def sa_kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
         bt = (b_sel * theta).reshape(s_grp * mu)
         alpha = alpha.at[flat].add(theta.reshape(s_grp * mu))
         f = f + Kfull @ bt                                # deferred GEMV
-        x = x + Y.T @ bt                                  # primal shadow
+        x = x + apply_t(Y, bt)                            # primal shadow
         objs = dual + jnp.cumsum(deltas) if cfg.track_objective \
             else jnp.zeros((s_grp,), cfg.dtype)
         dual = dual + jnp.sum(deltas)
@@ -253,7 +296,8 @@ def sa_kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
     return SolverResult(x=x, objective=objs,
                         aux={"alpha": alpha, "dual": dual, "f": f,
                              "inner_impl": grouped_impl_label(
-                                 inner_impl, H, s, mu, cfg.use_pallas)})
+                                 inner_impl, H, s, mu, cfg.use_pallas),
+                             **spmm_aux(A, cfg, "cross", H=H)})
 
 
 def _cli_kernel(args) -> str:
@@ -294,8 +338,11 @@ def _cli_describe(args, res, elapsed: float) -> str:
         "sa": "repro.core.kernel_svm:sa_kbdcd_svm",
     },
     objective=kernel_dual_objective,
-    costs=lambda dims, H, mu, s, P: cost_model.svm_costs(
-        dims, H, s, P, mu=mu, kernel="rbf"),
+    # kernel threads through from the caller's problem.kernel (default =
+    # this family's CLI/bench default, rbf) — poly/linear-kernelized
+    # problems used to report rbf eval flops from a hardcoded kernel.
+    costs=lambda dims, H, mu, s, P, kernel="rbf": cost_model.svm_costs(
+        dims, H, s, P, mu=mu, kernel=kernel),
     make_problem=_cli_problem,
     describe=_cli_describe,
     default_mu=1,

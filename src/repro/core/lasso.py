@@ -23,12 +23,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cost_model, linalg, prox as prox_lib
+from repro.core.sparse_exec import col_block_ops, prep_operand, spmm_aux
 from repro.core.types import (LassoProblem, SolverConfig, SolverResult,
+                              SparseOperand, operand_matvec,
                               register_family, require_unit_block)
 
 
 def _prep(problem: LassoProblem, cfg: SolverConfig):
-    A = jnp.asarray(problem.A, cfg.dtype)
+    A = prep_operand(problem.A, cfg.dtype)
     b = jnp.asarray(problem.b, cfg.dtype)
     n = A.shape[1]
     mu = cfg.block_size
@@ -63,6 +65,7 @@ def bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
     rebuilt locally from the row shard — no communication.
     """
     A, b, n, mu, q, sampler, prox = _prep(problem, cfg)
+    block_gram, block_apply = col_block_ops(A, cfg)
     key = jax.random.key(cfg.seed)
 
     if x0 is None:
@@ -70,27 +73,28 @@ def bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
         r0 = -b  # residual Ax - b at x = 0 (row shard)
     else:
         x0 = jnp.asarray(x0, cfg.dtype)
-        r0 = A @ x0 - b
+        r0 = operand_matvec(A, x0) - b
 
     def step(carry, h):
         x, r = carry
         idx = sampler(jax.random.fold_in(key, h))
-        Ah = A[:, idx]                                    # (m_loc, mu) local
         # --- Communication: one fused Allreduce of [G | A_h^T r] ---
-        GR = linalg.preduce(Ah.T @ jnp.concatenate([Ah, r[:, None]], 1),
-                            axis_name)                    # (mu, mu+1)
+        Ah, local = block_gram(idx, r[:, None])           # (mu, mu+1) local
+        GR = linalg.preduce(local, axis_name)
         G, rh = GR[:, :mu], GR[:, mu]
         v = linalg.power_iteration_max_eig(G, cfg.power_iters)
         eta = 1.0 / v
         g = x[idx] - eta * rh
         dx = prox(g, eta) - x[idx]
         x = x.at[idx].add(dx)
-        r = r + Ah @ dx
+        r = r + block_apply(Ah, dx)
         obj = _objective(r, x, problem, axis_name) if cfg.track_objective else 0.0
         return (x, r), obj
 
     (x, r), objs = jax.lax.scan(step, (x0, r0), jnp.arange(1, cfg.iterations + 1))
-    return SolverResult(x=x, objective=objs, aux={"residual": r})
+    return SolverResult(x=x, objective=objs,
+                        aux={"residual": r,
+                             **spmm_aux(A, cfg, "col_gram", extra=1)})
 
 
 # ---------------------------------------------------------------------------
@@ -109,6 +113,7 @@ def acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
     acceleration momentum resets, the standard warm-start convention).
     """
     A, b, n, mu, q, sampler, prox = _prep(problem, cfg)
+    block_gram, block_apply = col_block_ops(A, cfg)
     key = jax.random.key(cfg.seed)
     H = cfg.iterations
 
@@ -120,7 +125,7 @@ def acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
         ztil0 = -b                                        # A z0 - b
     else:
         z0 = jnp.asarray(x0, cfg.dtype)
-        ztil0 = A @ z0 - b
+        ztil0 = operand_matvec(A, z0) - b
     y0 = jnp.zeros((n,), cfg.dtype)
     ytil0 = jnp.zeros_like(b)                             # A y0
 
@@ -128,21 +133,21 @@ def acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
         z, y, ztil, ytil = carry
         h, th_prev, th_cur = inputs
         idx = sampler(jax.random.fold_in(key, h))
-        Ah = A[:, idx]                                    # (m_loc, mu)
         w = th_prev * th_prev * ytil + ztil               # (m_loc,)
         # --- Communication: one fused Allreduce of [G | r_h]  (lines 8-9) ---
-        GR = linalg.preduce(Ah.T @ jnp.concatenate([Ah, w[:, None]], 1),
-                            axis_name)                    # (mu, mu+1)
+        Ah, local = block_gram(idx, w[:, None])           # (mu, mu+1) local
+        GR = linalg.preduce(local, axis_name)
         G, rh = GR[:, :mu], GR[:, mu]
         v = linalg.power_iteration_max_eig(G, cfg.power_iters)   # line 10
         eta = 1.0 / (q * th_prev * v)                     # line 11
         g = z[idx] - eta * rh                             # line 12
         dz = prox(g, eta) - z[idx]                        # line 13
         z = z.at[idx].add(dz)                             # line 14
-        ztil = ztil + Ah @ dz                             # line 15
+        Adz = block_apply(Ah, dz)                         # A_h dz (local)
+        ztil = ztil + Adz                                 # line 15
         coef = (1.0 - q * th_prev) / (th_prev * th_prev)
         y = y.at[idx].add(-coef * dz)                     # line 16
-        ytil = ytil - coef * (Ah @ dz)                    # line 17
+        ytil = ytil - coef * Adz                          # line 17
         if cfg.track_objective:
             res = th_cur * th_cur * ytil + ztil           # A x_h - b
             x_h = th_cur * th_cur * y + z
@@ -157,7 +162,8 @@ def acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
     thH = thetas[-1]
     x = thH * thH * y + z                                 # line 19
     return SolverResult(x=x, objective=objs,
-                        aux={"residual": thH * thH * ytil + ztil})
+                        aux={"residual": thH * thH * ytil + ztil,
+                             **spmm_aux(A, cfg, "col_gram", extra=1)})
 
 
 def cd_lasso(problem: LassoProblem, cfg: SolverConfig,
@@ -179,9 +185,10 @@ def acc_cd_lasso(problem: LassoProblem, cfg: SolverConfig,
 def lasso_objective(problem: LassoProblem, x,
                     axis_name: Optional[object] = None):
     """Direct objective evaluation 1/2 ||Ax - b||^2 + g(x) (diagnostic)."""
-    A = jnp.asarray(problem.A)
+    A = problem.A if isinstance(problem.A, SparseOperand) \
+        else jnp.asarray(problem.A)
     x = jnp.asarray(x, A.dtype)
-    residual = A @ x - jnp.asarray(problem.b, A.dtype)
+    residual = operand_matvec(A, x) - jnp.asarray(problem.b, A.dtype)
     return _objective(residual, x, problem, axis_name)
 
 
@@ -214,7 +221,7 @@ def _cli_describe(args, res, elapsed: float) -> str:
         "sa_accelerated": "repro.core.sa_lasso:sa_acc_bcd_lasso",
     },
     objective=lasso_objective,
-    costs=lambda dims, H, mu, s, P: cost_model.lasso_costs(
+    costs=lambda dims, H, mu, s, P, kernel="linear": cost_model.lasso_costs(
         dims, H, mu, s, P),
     make_problem=_cli_problem,
     describe=_cli_describe,

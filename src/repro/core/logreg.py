@@ -48,7 +48,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cost_model, linalg
+from repro.core.sparse_exec import (cross_block, prep_operand,
+                                    row_block_ops, spmm_aux)
 from repro.core.types import (LogRegProblem, SolverConfig, SolverResult,
+                              SparseOperand, operand_matvec,
                               register_family)
 
 
@@ -57,10 +60,11 @@ def logreg_objective(problem: LogRegProblem, w,
     """Direct evaluation  (1/m) sum_i log(1+exp(-b_i a_i^T w))
     + lam/2 ||w||^2.  In distributed (column-partitioned) mode w is the
     local shard and the matvec A w needs one Allreduce."""
-    A = jnp.asarray(problem.A)
+    A = problem.A if isinstance(problem.A, SparseOperand) \
+        else jnp.asarray(problem.A)
     w = jnp.asarray(w, A.dtype)
     b = jnp.asarray(problem.b, A.dtype)
-    margins = linalg.preduce(A @ w, axis_name)            # (m,)
+    margins = linalg.preduce(operand_matvec(A, w), axis_name)  # (m,)
     sq = linalg.preduce(jnp.sum(w * w), axis_name)
     loss = jnp.mean(jnp.logaddexp(0.0, -b * margins))
     return loss + 0.5 * problem.lam * sq
@@ -76,7 +80,7 @@ def _init_state(problem: LogRegProblem, cfg: SolverConfig, axis_name, x0):
     """w (local shard), margins f = A w and sq = ||w||^2 (replicated).
     x0 = None starts at zero, where f and sq are zero without any
     communication; a warm start rebuilds them with one setup Allreduce."""
-    A = jnp.asarray(problem.A, cfg.dtype)
+    A = prep_operand(problem.A, cfg.dtype)
     b = jnp.asarray(problem.b, cfg.dtype)
     if x0 is None:
         w = jnp.zeros((A.shape[1],), cfg.dtype)
@@ -85,7 +89,8 @@ def _init_state(problem: LogRegProblem, cfg: SolverConfig, axis_name, x0):
         return A, b, w, f, sq
     w = jnp.asarray(x0, cfg.dtype)
     packed = linalg.preduce(
-        jnp.concatenate([A @ w, jnp.sum(w * w)[None]]), axis_name)
+        jnp.concatenate([operand_matvec(A, w), jnp.sum(w * w)[None]]),
+        axis_name)
     return A, b, w, packed[:-1], packed[-1]
 
 
@@ -105,21 +110,23 @@ def bcd_logreg(problem: LogRegProblem, cfg: SolverConfig,
     lam = jnp.asarray(problem.lam, cfg.dtype)
     key = jax.random.key(cfg.seed)
     A, b, w, f, sq = _init_state(problem, cfg, axis_name, x0)
+    take, _, densify, apply_t = row_block_ops(A, cfg)
     m = A.shape[0]
 
     def step(carry, h):
         w, f, sq = carry
         idx = linalg.sample_block(jax.random.fold_in(key, h), m, mu)
-        Y = A[idx]                                       # (mu, n_loc) local
+        Y = take(idx)                                    # (mu, n_loc) local
         # --- Communication: ONE fused Allreduce of  A Y^T ---
-        cross = linalg.preduce(A @ Y.T, axis_name)       # (m, mu)
+        cross = linalg.preduce(
+            cross_block(A, densify(Y), cfg.use_pallas), axis_name)  # (m, mu)
         G = cross[idx]                                   # (mu, mu) = Y Y^T
         fB = f[idx]                                      # = Y w (gather)
         c = -b[idx] * jax.nn.sigmoid(-b[idx] * fB)
         eta = _step_size(G, mu, lam, cfg.power_iters)
         d = 1.0 - eta * lam
         u = -(eta / mu) * c                              # (mu,)
-        w = d * w + Y.T @ u                              # local shard
+        w = d * w + apply_t(Y, u)                        # local shard
         sq = d * d * sq + 2.0 * d * (fB @ u) + u @ (G @ u)
         f = d * f + cross @ u                            # replicated
         obj = _tracked_objective(f, sq, b, lam) if cfg.track_objective \
@@ -129,7 +136,8 @@ def bcd_logreg(problem: LogRegProblem, cfg: SolverConfig,
     (w, f, sq), objs = jax.lax.scan(
         step, (w, f, sq), jnp.arange(1, cfg.iterations + 1))
     return SolverResult(x=w, objective=objs,
-                        aux={"margins": f, "w_norm_sq": sq})
+                        aux={"margins": f, "w_norm_sq": sq,
+                             **spmm_aux(A, cfg, "cross")})
 
 
 def _cli_problem(args):
@@ -157,7 +165,7 @@ def _cli_describe(args, res, elapsed: float) -> str:
         "sa": "repro.core.sa_logreg:sa_bcd_logreg",
     },
     objective=logreg_objective,
-    costs=lambda dims, H, mu, s, P: cost_model.logreg_costs(
+    costs=lambda dims, H, mu, s, P, kernel="linear": cost_model.logreg_costs(
         dims, H, mu, s, P),
     make_problem=_cli_problem,
     describe=_cli_describe,

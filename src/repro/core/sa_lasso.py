@@ -25,9 +25,36 @@ import jax.numpy as jnp
 from repro.core import linalg
 from repro.core.lasso import _objective, _prep
 from repro.core.sa_loop import run_grouped
+from repro.core.sparse_exec import col_block_ops, spmm_aux
 from repro.core.types import (LassoProblem, SolverConfig, SolverResult,
+                              SparseOperand, operand_matvec,
                               require_unit_block)
+from repro.kernels import spmm
 from repro.kernels.gram import gram_t
+
+
+def _reduce_gram_proj(local, smu, vec_cols, axis_name,
+                      symmetric: bool = False):
+    """ONE fused Allreduce of the LOCAL (smu, smu + k) Gram/projection
+    block -> (G, P) replicated, with G (smu, smu) and P (smu, k).
+
+    symmetric (``SolverConfig.symmetric_gram``, paper footnote 3): G is
+    symmetric, so communicating only its lower triangle halves the message
+    size — ~2x less W at O(s^2 mu^2) local pack/unpack reshuffling. The
+    reduced values are identical, only their layout changes.
+    """
+    if symmetric:
+        il, jl = jnp.tril_indices(smu)
+        packed = jnp.concatenate(
+            [local[:, :smu][il, jl], local[:, smu:].reshape(-1)])
+        packed = linalg.preduce(packed, axis_name)
+        ntri = il.shape[0]
+        G = jnp.zeros((smu, smu), local.dtype).at[il, jl].set(packed[:ntri])
+        G = G + jnp.tril(G, -1).T
+        P = packed[ntri:].reshape(smu, vec_cols)
+        return G, P
+    out = linalg.preduce(local, axis_name)
+    return out[:, :smu], out[:, smu:]
 
 
 def _gram_and_proj(Y, vecs, axis_name, symmetric: bool = False,
@@ -37,32 +64,18 @@ def _gram_and_proj(Y, vecs, axis_name, symmetric: bool = False,
     Y: (m_loc, s*mu) sampled columns; vecs: (m_loc, k) residual-like vectors.
     Returns (G, P) with G (s*mu, s*mu) and P (s*mu, k), replicated.
 
-    symmetric (``SolverConfig.symmetric_gram``, paper footnote 3): G is
-    symmetric, so communicating only its lower triangle halves the message
-    size — ~2x less W at O(s^2 mu^2) local pack/unpack reshuffling. The
-    reduced values are identical, only their layout changes.
-
     use_pallas routes the local GEMM through the ``repro.kernels.gram``
     Pallas kernel (f32 MXU accumulation); the plain-jnp path otherwise.
+    (Sparse operands compute the same local block via the blocked-ELL
+    SpMM in the solvers below and share :func:`_reduce_gram_proj`.)
     """
-    smu = Y.shape[1]
     rhs = jnp.concatenate([Y, vecs], axis=1)
     if use_pallas:
         local = gram_t(Y, rhs, use_pallas=True).astype(Y.dtype)
     else:
         local = Y.T @ rhs
-    if symmetric:
-        il, jl = jnp.tril_indices(smu)
-        packed = jnp.concatenate(
-            [local[:, :smu][il, jl], local[:, smu:].reshape(-1)])
-        packed = linalg.preduce(packed, axis_name)
-        ntri = il.shape[0]
-        G = jnp.zeros((smu, smu), local.dtype).at[il, jl].set(packed[:ntri])
-        G = G + jnp.tril(G, -1).T
-        P = packed[ntri:].reshape(smu, vecs.shape[1])
-        return G, P
-    out = linalg.preduce(local, axis_name)
-    return out[:, :smu], out[:, smu:]
+    return _reduce_gram_proj(local, Y.shape[1], vecs.shape[1], axis_name,
+                             symmetric)
 
 
 def _sample_all(key, sampler, start, s_grp):
@@ -82,6 +95,8 @@ def sa_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
                  axis_name: Optional[object] = None,
                  x0=None) -> SolverResult:
     A, b, n, mu, q, sampler, prox = _prep(problem, cfg)
+    sparse = isinstance(A, SparseOperand)
+    block_gram, _ = col_block_ops(A, cfg)
     key = jax.random.key(cfg.seed)
     s, H = cfg.s, cfg.iterations
     m_loc = A.shape[0]
@@ -91,16 +106,21 @@ def sa_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
         r0 = -b
     else:
         x0 = jnp.asarray(x0, cfg.dtype)
-        r0 = A @ x0 - b
+        r0 = operand_matvec(A, x0) - b
 
     def group(carry, start, s):
         x, r = carry
         idxs = _sample_all(key, sampler, start, s)        # (s, mu)
-        Y = A[:, idxs.reshape(s * mu)]                    # (m_loc, s*mu) local
         # --- Communication: ONE fused Allreduce ---
-        G, P = _gram_and_proj(Y, r[:, None], axis_name,
-                              symmetric=cfg.symmetric_gram,
-                              use_pallas=cfg.use_pallas)
+        if sparse:
+            handle, local = block_gram(idxs.reshape(s * mu), r[:, None])
+            G, P = _reduce_gram_proj(local, s * mu, 1, axis_name,
+                                     cfg.symmetric_gram)
+        else:
+            Y = A[:, idxs.reshape(s * mu)]                # (m_loc, s*mu) local
+            G, P = _gram_and_proj(Y, r[:, None], axis_name,
+                                  symmetric=cfg.symmetric_gram,
+                                  use_pallas=cfg.use_pallas)
         G4 = G.reshape(s, mu, s, mu)
         r_proj = P[:, 0].reshape(s, mu)
 
@@ -122,8 +142,15 @@ def sa_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
         (x, dx_buf), _ = jax.lax.scan(
             inner, (x, jnp.zeros((s, mu), cfg.dtype)), jnp.arange(s))
 
-        # Deferred residual update (paper Eq. 7 analogue): local GEMV.
-        steps = jnp.einsum("msc,sc->sm", Y.reshape(m_loc, s, mu), dx_buf)
+        # Deferred residual update (paper Eq. 7 analogue): local GEMV
+        # (sparse: O(nnz of the sampled columns) scatter-adds).
+        if sparse:
+            rows_g, vals_g, _ = handle
+            steps = spmm.scatter_steps(rows_g.reshape(s, mu, -1),
+                                       vals_g.reshape(s, mu, -1),
+                                       dx_buf, m_loc)
+        else:
+            steps = jnp.einsum("msc,sc->sm", Y.reshape(m_loc, s, mu), dx_buf)
         r_new = r + jnp.sum(steps, axis=0)
 
         if cfg.track_objective:
@@ -140,7 +167,9 @@ def sa_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
         return (x, r_new), objs
 
     (x, r), objs = run_grouped(group, (x0, r0), H, s, cfg.dtype)
-    return SolverResult(x=x, objective=objs, aux={"residual": r})
+    return SolverResult(x=x, objective=objs,
+                        aux={"residual": r,
+                             **spmm_aux(A, cfg, "col_gram", H=H, extra=1)})
 
 
 # ---------------------------------------------------------------------------
@@ -151,6 +180,8 @@ def sa_acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
                      axis_name: Optional[object] = None,
                      x0=None) -> SolverResult:
     A, b, n, mu, q, sampler, prox = _prep(problem, cfg)
+    sparse = isinstance(A, SparseOperand)
+    block_gram, _ = col_block_ops(A, cfg)
     key = jax.random.key(cfg.seed)
     s, H = cfg.s, cfg.iterations
     m_loc = A.shape[0]
@@ -163,18 +194,25 @@ def sa_acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
         ztil0 = -b
     else:
         z0 = jnp.asarray(x0, cfg.dtype)
-        ztil0 = A @ z0 - b
+        ztil0 = operand_matvec(A, z0) - b
     y0 = jnp.zeros((n,), cfg.dtype)
     ytil0 = jnp.zeros_like(b)
 
     def group(carry, start, s):
         z, y, ztil, ytil = carry
         idxs = _sample_all(key, sampler, start, s)        # (s, mu)
-        Y = A[:, idxs.reshape(s * mu)]                    # (m_loc, s*mu) local
         # --- Communication: ONE fused Allreduce (Alg. 2 lines 11-12) ---
-        G, P = _gram_and_proj(Y, jnp.stack([ytil, ztil], axis=1), axis_name,
-                              symmetric=cfg.symmetric_gram,
-                              use_pallas=cfg.use_pallas)
+        if sparse:
+            handle, local = block_gram(idxs.reshape(s * mu),
+                                       jnp.stack([ytil, ztil], axis=1))
+            G, P = _reduce_gram_proj(local, s * mu, 2, axis_name,
+                                     cfg.symmetric_gram)
+        else:
+            Y = A[:, idxs.reshape(s * mu)]                # (m_loc, s*mu) local
+            G, P = _gram_and_proj(Y, jnp.stack([ytil, ztil], axis=1),
+                                  axis_name,
+                                  symmetric=cfg.symmetric_gram,
+                                  use_pallas=cfg.use_pallas)
         G4 = G.reshape(s, mu, s, mu)
         y_proj = P[:, 0].reshape(s, mu)                   # A_j^T ytil_sk
         z_proj = P[:, 1].reshape(s, mu)                   # A_j^T ztil_sk
@@ -206,8 +244,15 @@ def sa_acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
         (z, y, dz_buf), _ = jax.lax.scan(
             inner, (z, y, jnp.zeros((s, mu), cfg.dtype)), jnp.arange(s))
 
-        # Deferred m-dimensional updates (paper Eqs. 7 & 9): local GEMVs.
-        steps = jnp.einsum("msc,sc->sm", Y.reshape(m_loc, s, mu), dz_buf)
+        # Deferred m-dimensional updates (paper Eqs. 7 & 9): local GEMVs
+        # (sparse: O(nnz of the sampled columns) scatter-adds).
+        if sparse:
+            rows_g, vals_g, _ = handle
+            steps = spmm.scatter_steps(rows_g.reshape(s, mu, -1),
+                                       vals_g.reshape(s, mu, -1),
+                                       dz_buf, m_loc)
+        else:
+            steps = jnp.einsum("msc,sc->sm", Y.reshape(m_loc, s, mu), dz_buf)
         ztil_new = ztil + jnp.sum(steps, axis=0)
         ytil_new = ytil - jnp.einsum("t,tm->m", coefU, steps)
 
@@ -234,7 +279,8 @@ def sa_acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
     thH = thetas[-1]
     x = thH * thH * y + z
     return SolverResult(x=x, objective=objs,
-                        aux={"residual": thH * thH * ytil + ztil})
+                        aux={"residual": thH * thH * ytil + ztil,
+                             **spmm_aux(A, cfg, "col_gram", H=H, extra=2)})
 
 
 def sa_cd_lasso(problem, cfg, axis_name=None, x0=None):

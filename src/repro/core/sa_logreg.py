@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from repro.core import linalg
 from repro.core.logreg import _init_state, _step_size, _tracked_objective
 from repro.core.sa_loop import run_grouped
+from repro.core.sparse_exec import cross_block, row_block_ops, spmm_aux
 from repro.core.types import LogRegProblem, SolverConfig, SolverResult
 
 
@@ -51,6 +52,7 @@ def sa_bcd_logreg(problem: LogRegProblem, cfg: SolverConfig,
     key = jax.random.key(cfg.seed)
     s, H = cfg.s, cfg.iterations
     A, b, w, f, sq = _init_state(problem, cfg, axis_name, x0)
+    take, _, densify, apply_t = row_block_ops(A, cfg)
     m = A.shape[0]
 
     def group(carry, start, s_grp):
@@ -62,9 +64,11 @@ def sa_bcd_logreg(problem: LogRegProblem, cfg: SolverConfig,
             lambda h: linalg.sample_block(jax.random.fold_in(key, h),
                                           m, mu))(hs)     # (s_grp, mu)
         flat = idxs.reshape(s_grp * mu)
-        Y = A[flat]                                       # (s_grp*mu, n_loc)
+        Y = take(flat)                                    # (s_grp*mu, n_loc)
         # --- Communication: ONE fused Allreduce of  A Y^T ---
-        cross = linalg.preduce(A @ Y.T, axis_name)        # (m, s_grp*mu)
+        cross = linalg.preduce(
+            cross_block(A, densify(Y), cfg.use_pallas),
+            axis_name)                                    # (m, s_grp*mu)
         cross_r = cross.reshape(m, s_grp, mu)
         b_sel = b[flat].reshape(s_grp, mu)
 
@@ -92,9 +96,10 @@ def sa_bcd_logreg(problem: LogRegProblem, cfg: SolverConfig,
             inner, (f, sq, rho0, U0), jnp.arange(s_grp))
 
         # Deferred w update (local GEMV): w <- rho w + Y^T vec(U).
-        w = rho * w + Y.T @ U.reshape(s_grp * mu)
+        w = rho * w + apply_t(Y, U.reshape(s_grp * mu))
         return (w, f, sq), objs
 
     (w, f, sq), objs = run_grouped(group, (w, f, sq), H, s, cfg.dtype)
     return SolverResult(x=w, objective=objs,
-                        aux={"margins": f, "w_norm_sq": sq})
+                        aux={"margins": f, "w_norm_sq": sq,
+                             **spmm_aux(A, cfg, "cross", H=H)})

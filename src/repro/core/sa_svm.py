@@ -36,9 +36,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import linalg
-from repro.core.sa_lasso import _gram_and_proj
+from repro.core.sa_lasso import _gram_and_proj, _reduce_gram_proj
 from repro.core.sa_loop import grouped_impl_label, run_grouped
+from repro.core.sparse_exec import (prep_operand, row_block_ops,
+                                    spmm_aux)
 from repro.core.types import (SVMProblem, SolverConfig, SolverResult,
+                              SparseOperand, operand_rmatvec,
                               require_unit_block)
 from repro.kernels.svm_inner import inner_impl, svm_inner_loop
 
@@ -48,7 +51,9 @@ def sa_bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
                 alpha0=None) -> SolverResult:
     """s-step unrolled BDCD: identical iterates to ``bdcd_svm`` in exact
     arithmetic, ONE Allreduce per s inner iterations."""
-    A = jnp.asarray(problem.A, cfg.dtype)
+    A = prep_operand(problem.A, cfg.dtype)
+    sparse = isinstance(A, SparseOperand)
+    take, gram, _, apply_t = row_block_ops(A, cfg)
     b = jnp.asarray(problem.b, cfg.dtype)
     m = A.shape[0]
     mu = cfg.block_size
@@ -59,7 +64,7 @@ def sa_bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
 
     alpha = jnp.zeros((m,), cfg.dtype) if alpha0 is None \
         else jnp.asarray(alpha0, cfg.dtype)
-    x = A.T @ (b * alpha)                                 # line 2 (local)
+    x = operand_rmatvec(A, b * alpha)                     # line 2 (local)
     # warm start: resume incremental dual tracking from f_D(alpha0), as in
     # ``bdcd_svm``, reusing the x just built (zero-start: no communication).
     dual0 = jnp.asarray(0.0, cfg.dtype) if alpha0 is None else (
@@ -78,12 +83,16 @@ def sa_bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
             lambda h: linalg.sample_block(jax.random.fold_in(key, h),
                                           m, mu))(hs)     # (s_grp, mu)
         flat = idxs.reshape(s_grp * mu)
-        Y = A[flat]                                       # (s_grp*mu, n_loc)
+        Y = take(flat)                                    # (s_grp*mu, n_loc)
         b_sel = b[flat].reshape(s_grp, mu)                # replicated
         # --- Communication: ONE fused Allreduce of  Y [Y^T | x] ---
-        Graw, P = _gram_and_proj(Y.T, x[:, None], axis_name,
-                                 symmetric=cfg.symmetric_gram,
-                                 use_pallas=cfg.use_pallas)
+        if sparse:
+            Graw, P = _reduce_gram_proj(gram(Y, x[:, None]), s_grp * mu,
+                                        1, axis_name, cfg.symmetric_gram)
+        else:
+            Graw, P = _gram_and_proj(Y.T, x[:, None], axis_name,
+                                     symmetric=cfg.symmetric_gram,
+                                     use_pallas=cfg.use_pallas)
         G = Graw + gamma * jnp.eye(s_grp * mu, dtype=cfg.dtype)  # line 9
         proj = P[:, 0].reshape(s_grp, mu)                 # line 10: Y x_sk
         a_vals = alpha[flat].reshape(s_grp, mu)
@@ -96,7 +105,7 @@ def sa_bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
         bt = (b_sel * theta).reshape(s_grp * mu)
         alpha = alpha.at[flat].add(theta.reshape(s_grp * mu))  # line 20
         # Deferred primal update (local GEMV): x += Y^T (theta * b_sel).
-        x = x + Y.T @ bt                                  # line 21, batched
+        x = x + apply_t(Y, bt)                            # line 21, batched
         objs = dual + jnp.cumsum(deltas) if cfg.track_objective \
             else jnp.zeros((s_grp,), cfg.dtype)
         dual = dual + jnp.sum(deltas)
@@ -107,7 +116,9 @@ def sa_bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
     return SolverResult(x=x, objective=objs,
                         aux={"alpha": alpha, "dual": dual,
                              "inner_impl": grouped_impl_label(
-                                 inner_impl, H, s, mu, cfg.use_pallas)})
+                                 inner_impl, H, s, mu, cfg.use_pallas),
+                             **spmm_aux(A, cfg, "row_gram", H=H,
+                                        extra=1)})
 
 
 def sa_svm(problem: SVMProblem, cfg: SolverConfig,

@@ -30,7 +30,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cost_model, linalg
+from repro.core.sparse_exec import prep_operand, row_block_ops, spmm_aux
 from repro.core.types import (SVMProblem, SolverConfig, SolverResult,
+                              operand_matvec, operand_rmatvec,
                               register_family, require_unit_block)
 
 
@@ -40,8 +42,7 @@ def primal_objective(problem: SVMProblem, x, axis_name: Optional[object] = None)
     In distributed (column-partitioned) mode, x is the local shard and the
     matvec A x needs one Allreduce.
     """
-    A = jnp.asarray(problem.A)
-    margins = linalg.preduce(A @ x, axis_name)           # (m,)
+    margins = linalg.preduce(operand_matvec(problem.A, x), axis_name)  # (m,)
     xi = jnp.maximum(1.0 - problem.b * margins, 0.0)
     loss = jnp.sum(xi) if problem.loss == "l1" else jnp.sum(xi * xi)
     sq = linalg.preduce(jnp.sum(x * x), axis_name)
@@ -50,8 +51,7 @@ def primal_objective(problem: SVMProblem, x, axis_name: Optional[object] = None)
 
 def dual_objective(problem: SVMProblem, alpha, axis_name: Optional[object] = None):
     """f_D(alpha) = 1/2 alpha^T Qbar alpha - e^T alpha (direct evaluation)."""
-    A = jnp.asarray(problem.A)
-    w = A.T @ (problem.b * alpha)                        # (n_loc,) local
+    w = operand_rmatvec(problem.A, problem.b * alpha)    # (n_loc,) local
     quad = linalg.preduce(jnp.sum(w * w), axis_name)
     return 0.5 * quad + 0.5 * problem.gamma * jnp.sum(alpha * alpha) \
         - jnp.sum(alpha)
@@ -88,7 +88,8 @@ def bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
         delta f_D = theta^T g_B + 1/2 (b_B theta)^T G (b_B theta)
     where G = Y Y^T + gamma I is the reduced block the step already holds.
     """
-    A = jnp.asarray(problem.A, cfg.dtype)
+    A = prep_operand(problem.A, cfg.dtype)
+    take, gram, _, apply_t = row_block_ops(A, cfg)
     b = jnp.asarray(problem.b, cfg.dtype)
     m = A.shape[0]
     mu = cfg.block_size
@@ -98,7 +99,7 @@ def bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
 
     alpha = jnp.zeros((m,), cfg.dtype) if alpha0 is None \
         else jnp.asarray(alpha0, cfg.dtype)
-    x = A.T @ (b * alpha)                                # line 2 (local shard)
+    x = operand_rmatvec(A, b * alpha)                    # line 2 (local shard)
     # incremental tracking resumes from f_D(alpha0) on warm start (zero at
     # alpha0 = 0 without any communication), so a warm-started solve's
     # objective trace continues the previous solve's. Reuses the x we just
@@ -111,11 +112,10 @@ def bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
     def step(carry, h):
         alpha, x, dual = carry
         idx = linalg.sample_block(jax.random.fold_in(key, h), m, mu)
-        Y = A[idx]                                       # (mu, n_loc) local
+        Y = take(idx)                                    # (mu, n_loc) local
         b_B = b[idx]
         # --- Communication: ONE fused Allreduce of  Y [Y^T | x] ---
-        red = linalg.preduce(
-            Y @ jnp.concatenate([Y.T, x[:, None]], axis=1), axis_name)
+        red = linalg.preduce(gram(Y, x[:, None]), axis_name)
         G = red[:, :mu] + gamma * eye_mu                 # line 7 (block)
         a_B = alpha[idx]
         g = b_B * red[:, mu] - 1.0 + gamma * a_B         # line 8 (block)
@@ -130,7 +130,7 @@ def bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
             0.0)
         alpha = alpha.at[idx].add(theta)                 # line 13
         bt = b_B * theta
-        x = x + Y.T @ bt                                 # line 14 (local)
+        x = x + apply_t(Y, bt)                           # line 14 (local)
         dual = dual + jnp.sum(theta * g) + 0.5 * bt @ (G @ bt)
         obj = dual if cfg.track_objective else jnp.asarray(0.0, cfg.dtype)
         return (alpha, x, dual), obj
@@ -138,7 +138,8 @@ def bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
     (alpha, x, dual), objs = jax.lax.scan(
         step, (alpha, x, dual0), jnp.arange(1, cfg.iterations + 1))
     return SolverResult(x=x, objective=objs,
-                        aux={"alpha": alpha, "dual": dual})
+                        aux={"alpha": alpha, "dual": dual,
+                             **spmm_aux(A, cfg, "row_gram", extra=1)})
 
 
 def dcd_svm(problem: SVMProblem, cfg: SolverConfig,
@@ -184,7 +185,9 @@ def _cli_describe(args, res, elapsed: float) -> str:
         "sa": "repro.core.sa_svm:sa_bdcd_svm",
     },
     objective=dual_objective,
-    costs=lambda dims, H, mu, s, P: cost_model.svm_costs(
+    # this family only accepts kernel="linear" problems; the hook still
+    # takes the registry-wide kernel argument and ignores it.
+    costs=lambda dims, H, mu, s, P, kernel="linear": cost_model.svm_costs(
         dims, H, s, P, mu=mu),
     make_problem=_cli_problem,
     describe=_cli_describe,

@@ -16,7 +16,10 @@ import dataclasses
 import importlib
 from typing import Any, Callable, Dict, Mapping, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.experimental import sparse as jsparse
 
 
 # ---------------------------------------------------------------------------
@@ -103,12 +106,246 @@ def _rbf_kernel(cross, unorms, vnorms, params):
     return jnp.exp(-width * jnp.maximum(sq, 0.0))
 
 
+# ---------------------------------------------------------------------------
+# Sparse operands.
+#
+# The paper's Table I costs carry the density factor f, and its 1.2-5.1x
+# speedups are measured on sparse LIBSVM data — so the repo executes
+# sparse operands instead of merely modeling them. A SparseOperand holds
+# TWO coupled forms of the same matrix:
+#
+#   * a BCOO matrix (``jax.experimental.sparse``) — the interchange /
+#     general-matmul form;
+#   * a padded blocked-ELL layout, stored BOTH row-major and col-major:
+#     per row (resp. column), the nonzero indices and values padded to a
+#     common width K that is a multiple of ``ell_block``, plus the
+#     per-row/column count of *active* K-blocks. Padded slots hold
+#     index 0 / value 0, which makes every gather, scatter and SpMM
+#     below exact with no masking.
+#
+# The double orientation is what makes the solvers' sampling cheap: the
+# Lasso family samples COLUMNS of A (gather rows of the col-major
+# arrays), the SVM/logreg families sample ROWS (gather rows of the
+# row-major arrays) — either way a blocked-ELL sub-operand falls out of
+# a plain row gather and feeds ``repro.kernels.spmm.ell_spmm`` directly.
+# ---------------------------------------------------------------------------
+
+def ell_width(max_nnz: int, ell_block: int) -> int:
+    """The padded ELL width for a max per-row nnz: at least one block,
+    rounded up to a multiple of ``ell_block``."""
+    return -(-max(int(max_nnz), 1) // ell_block) * ell_block
+
+
+def _ell_from_coo(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                  R: int, ell_block: int, width: Optional[int]):
+    """Row-major padded ELL arrays from COO triplets (host numpy,
+    vectorized — no per-row Python loop): (idx, vals, blocks)."""
+    counts = np.bincount(rows, minlength=R) if rows.size \
+        else np.zeros(R, np.int64)
+    K = ell_width(counts.max() if R else 0, ell_block)
+    if width is not None:
+        if width < K:
+            raise ValueError(
+                f"ELL width {width} < required {K} "
+                f"(max row nnz {int(counts.max())})")
+        K = width
+    order = np.lexsort((cols, rows))
+    r_s, c_s, v_s = rows[order], cols[order], vals[order]
+    starts = np.concatenate([[0], np.cumsum(counts[:-1])]) if R \
+        else np.zeros(0, np.int64)
+    offsets = np.arange(r_s.size) - starts[r_s]
+    idx = np.zeros((R, K), np.int32)
+    out = np.zeros((R, K), vals.dtype)
+    idx[r_s, offsets] = c_s
+    out[r_s, offsets] = v_s
+    blocks = ((counts + ell_block - 1) // ell_block).astype(np.int32)
+    return jnp.asarray(idx), jnp.asarray(out), jnp.asarray(blocks)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SparseOperand:
+    """A sparse (m, n) data matrix in BCOO + padded blocked-ELL form.
+
+    row_cols/row_vals: (m, Kr) column indices / values per row;
+    row_blocks: (m,) active Kr-block count per row (the blocked-ELL nnz
+    metadata the Pallas SpMM uses to skip padding). col_rows/col_vals/
+    col_blocks: the same, per column. bcoo: the BCOO form (None inside
+    ``shard_map`` — the sharded driver rebuilds per-shard ELL arrays and
+    drops it). ell_block: the K-padding quantum (static pytree aux).
+
+    Registered as a pytree so operands flow through jit/shard_map like
+    arrays; every problem dataclass accepts one in place of its dense
+    ``A`` and the solvers detect it with ``isinstance``.
+    """
+
+    row_cols: Any
+    row_vals: Any
+    row_blocks: Any
+    col_rows: Any
+    col_vals: Any
+    col_blocks: Any
+    bcoo: Any = None
+    ell_block: int = 8
+
+    def tree_flatten(self):
+        return ((self.row_cols, self.row_vals, self.row_blocks,
+                 self.col_rows, self.col_vals, self.col_blocks,
+                 self.bcoo), self.ell_block)
+
+    @classmethod
+    def tree_unflatten(cls, ell_block, children):
+        return cls(*children, ell_block=ell_block)
+
+    # -- construction -------------------------------------------------
+
+    @classmethod
+    def from_coo(cls, rows, cols, vals, shape: Tuple[int, int],
+                 ell_block: int = 8,
+                 row_width: Optional[int] = None,
+                 col_width: Optional[int] = None,
+                 bcoo=None) -> "SparseOperand":
+        """Build both ELL orientations from COO triplets — O(nnz) host
+        work and memory, never materializing the dense matrix. The
+        triplets must be duplicate-free (``from_bcoo`` pre-combines)."""
+        rows = np.asarray(rows)
+        cols = np.asarray(cols)
+        vals = np.asarray(vals)
+        rc, rv, rb = _ell_from_coo(rows, cols, vals, shape[0], ell_block,
+                                   row_width)
+        cr, cv, cb = _ell_from_coo(cols, rows, vals, shape[1], ell_block,
+                                   col_width)
+        return cls(rc, rv, rb, cr, cv, cb, bcoo, ell_block)
+
+    @classmethod
+    def from_dense(cls, A, ell_block: int = 8,
+                   row_width: Optional[int] = None,
+                   col_width: Optional[int] = None,
+                   with_bcoo: bool = True) -> "SparseOperand":
+        An = np.asarray(A)
+        if An.ndim != 2:
+            raise ValueError(f"expected a matrix, got shape {An.shape}")
+        rows, cols = np.nonzero(An)
+        bcoo = jsparse.BCOO.fromdense(jnp.asarray(An)) if with_bcoo \
+            else None
+        return cls.from_coo(rows, cols, An[rows, cols], An.shape,
+                            ell_block=ell_block, row_width=row_width,
+                            col_width=col_width, bcoo=bcoo)
+
+    @classmethod
+    def from_bcoo(cls, mat, ell_block: int = 8) -> "SparseOperand":
+        """O(nnz) — duplicates are summed, the dense matrix is never
+        materialized (the whole point at LIBSVM scale)."""
+        m, n = mat.shape
+        idx = np.asarray(mat.indices)
+        data = np.asarray(mat.data)
+        keys = idx[:, 0].astype(np.int64) * n + idx[:, 1].astype(np.int64)
+        uniq, inverse = np.unique(keys, return_inverse=True)
+        vals = np.zeros(uniq.size, data.dtype)
+        np.add.at(vals, inverse, data)
+        return cls.from_coo(uniq // n, uniq % n, vals, (m, n),
+                            ell_block=ell_block, bcoo=mat)
+
+    # -- shape / dtype ------------------------------------------------
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.row_cols.shape[0], self.col_rows.shape[0])
+
+    @property
+    def ndim(self) -> int:
+        return 2
+
+    @property
+    def dtype(self):
+        return self.row_vals.dtype
+
+    @property
+    def nnz(self) -> int:
+        """Stored nonzeros (host-side; padding never stores nonzeros)."""
+        return int((np.asarray(self.row_vals) != 0).sum())
+
+    def astype(self, dtype) -> "SparseOperand":
+        bcoo = None if self.bcoo is None else jsparse.BCOO(
+            (self.bcoo.data.astype(dtype), self.bcoo.indices),
+            shape=self.bcoo.shape)
+        return dataclasses.replace(
+            self, row_vals=self.row_vals.astype(dtype),
+            col_vals=self.col_vals.astype(dtype), bcoo=bcoo)
+
+    # -- conversions / products (pure jnp — safe inside jit) ----------
+
+    def todense(self):
+        m, n = self.shape
+        return jnp.zeros((m, n), self.dtype).at[
+            jnp.arange(m)[:, None], self.row_cols].add(self.row_vals)
+
+    def to_bcoo(self):
+        return self.bcoo if self.bcoo is not None \
+            else jsparse.BCOO.fromdense(self.todense())
+
+    def matvec(self, x):
+        """A @ x via the row-major ELL arrays: O(nnz)."""
+        return jnp.einsum("mk,mk->m", self.row_vals, x[self.row_cols])
+
+    def rmatvec(self, y):
+        """A^T @ y via the col-major ELL arrays: O(nnz)."""
+        return jnp.einsum("nk,nk->n", self.col_vals, y[self.col_rows])
+
+    # -- sampled-block gathers (the solvers' hot path) ----------------
+
+    def gather_cols(self, idx):
+        """ELL form of the sampled columns A[:, idx]: (rows, vals,
+        blocks), each gathered along the leading axis — O(|idx| * Kc)."""
+        return (self.col_rows[idx], self.col_vals[idx],
+                self.col_blocks[idx])
+
+    def gather_rows(self, idx):
+        """ELL form of the sampled rows A[idx]: (cols, vals, blocks)."""
+        return (self.row_cols[idx], self.row_vals[idx],
+                self.row_blocks[idx])
+
+    def host_coo(self):
+        """COO triplets (host numpy) recovered from the row-major ELL
+        arrays; stored zeros are dropped (they contribute nothing). The
+        sharded driver splits these per shard at O(nnz) cost."""
+        vals = np.asarray(self.row_vals)
+        cols = np.asarray(self.row_cols)
+        mask = vals != 0
+        rows = np.broadcast_to(
+            np.arange(vals.shape[0])[:, None], vals.shape)
+        return rows[mask], cols[mask], vals[mask]
+
+    def squeeze_shard(self) -> "SparseOperand":
+        """Drop the leading stacked-shard axis the sharded driver adds
+        (each leaf arrives inside ``shard_map`` with leading dim 1)."""
+        return SparseOperand(
+            self.row_cols[0], self.row_vals[0], self.row_blocks[0],
+            self.col_rows[0], self.col_vals[0], self.col_blocks[0],
+            None, self.ell_block)
+
+
+def operand_matvec(A, x):
+    """A @ x for a dense array or a SparseOperand."""
+    if isinstance(A, SparseOperand):
+        return A.matvec(x)
+    return jnp.asarray(A) @ x
+
+
+def operand_rmatvec(A, y):
+    """A^T @ y for a dense array or a SparseOperand."""
+    if isinstance(A, SparseOperand):
+        return A.rmatvec(y)
+    return jnp.asarray(A).T @ y
+
+
 @dataclasses.dataclass(frozen=True)
 class LassoProblem:
     """Proximal least-squares problem data.
 
-    A: (m, n) design matrix (m data points, n features). In the distributed
-       solvers A holds the *local row shard*.
+    A: (m, n) design matrix (m data points, n features) — a dense array
+       or a :class:`SparseOperand`. In the distributed solvers A holds
+       the *local row shard*.
     b: (m,) labels / targets (row-sharded alongside A when distributed).
     lam: l1 regularization weight (paper uses lam = 100 * sigma_min).
     l2: optional l2 weight -> elastic net (prox changes, loss unchanged).
@@ -132,8 +369,9 @@ class LassoProblem:
 class SVMProblem:
     """Dual linear SVM problem data.
 
-    A: (m, n) data matrix; in the distributed solver A holds the *local
-       column shard* (1D-column partitioning, as in the paper Sec. V).
+    A: (m, n) data matrix (dense or :class:`SparseOperand`); in the
+       distributed solver A holds the *local column shard* (1D-column
+       partitioning, as in the paper Sec. V).
     b: (m,) binary labels in {-1, +1} (replicated when distributed).
     lam: SVM penalty parameter (paper: lam = 1).
     loss: "l1" (hinge) or "l2" (squared hinge).
@@ -177,9 +415,10 @@ class LogRegProblem:
     """Binary logistic-regression problem data (communication-avoiding
     logistic regression, after Devarakonda & Demmel, arXiv:2011.08281).
 
-    A: (m, n) data matrix; in the distributed solver A holds the *local
-       column shard* (1D-column partitioning, exactly the SVM layout:
-       w in R^n is partitioned, everything in R^m is replicated).
+    A: (m, n) data matrix (dense or :class:`SparseOperand`); in the
+       distributed solver A holds the *local column shard* (1D-column
+       partitioning, exactly the SVM layout: w in R^n is partitioned,
+       everything in R^m is replicated).
     b: (m,) binary labels in {-1, +1} (replicated when distributed).
     lam: l2 regularization weight — the objective is
          (1/m) sum_i log(1 + exp(-b_i a_i^T w)) + lam/2 ||w||^2.
@@ -232,8 +471,12 @@ class ProblemFamily:
     accepts:    optional tie-break predicate when several families share a
                 problem dataclass (linear vs kernel SVM).
     objective:  direct objective evaluation ``fn(problem, x_or_alpha)``.
-    costs:      cost-model entry ``fn(dims, H, mu, s, P) -> dict`` (paper
-                Table I analogue).
+    costs:      cost-model entry
+                ``fn(dims, H, mu, s, P, kernel="linear") -> dict`` (paper
+                Table I analogue). Callers with a problem in hand pass
+                its ``problem.kernel`` so kernelized families report the
+                ACTUAL kernel's evaluation flops (the ksvm hook used to
+                hardcode rbf); families without a kernel axis ignore it.
     make_problem / describe: CLI hooks — build a problem from parsed
                 ``argparse`` args; format a one-line result summary.
     default_mu: CLI default block size.

@@ -7,8 +7,12 @@ sequences, s-fold latency reduction, s-fold flop/bandwidth growth) are
 dataset-independent; the paper itself emphasizes speedups hold across
 "over/under-determined, sparse and dense" data (Sec. IV-B).
 
-Matrices are returned dense with explicit zero patterns (TPU/XLA has no
-CSR SpMM; density remains a cost-model parameter — DESIGN.md).
+Matrices come in TWO coupled forms drawn from the SAME RNG stream: the
+dense array with explicit zero patterns, and (``as_operand=True``) a
+:class:`repro.core.types.SparseOperand` — BCOO plus the padded
+blocked-ELL layout that ``repro.kernels.spmm`` executes, so density is
+no longer just a cost-model parameter (DESIGN.md "Sparse operands").
+``operand.todense()`` reproduces the dense form bit-for-bit.
 """
 from __future__ import annotations
 
@@ -16,6 +20,8 @@ import dataclasses
 from typing import Tuple
 
 import numpy as np
+
+from repro.core.types import SparseOperand
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,12 +74,18 @@ def _sparse_matrix(rng: np.random.Generator, m: int, n: int,
 
 
 def make_lasso_dataset(name: str, seed: int = 0, k_sparse: int = 32,
-                       noise: float = 0.1) -> Tuple[np.ndarray, np.ndarray, float]:
+                       noise: float = 0.1, as_operand: bool = False
+                       ) -> Tuple[object, np.ndarray, float]:
     """Returns (A, b, lam_max) for a named synthetic regime.
 
     b = A x_true + noise with a k-sparse planted x_true, so lasso has a
     meaningful sparse solution. lam_max = ||A^T b||_inf is the smallest
     lambda for which x* = 0; benchmarks use fractions of it.
+
+    as_operand=True returns A as a :class:`SparseOperand` (BCOO +
+    blocked-ELL) built from the SAME dense draw — same RNG stream, and
+    ``A.todense()`` equals the dense form exactly, so dense and sparse
+    solves of one named dataset see identical data.
     """
     spec = SYNTHETIC_DATASETS[name]
     rng = np.random.default_rng(seed)
@@ -83,19 +95,36 @@ def make_lasso_dataset(name: str, seed: int = 0, k_sparse: int = 32,
     x_true[support] = rng.standard_normal(len(support)).astype(np.float32)
     b = A @ x_true + noise * rng.standard_normal(spec.m).astype(np.float32)
     lam_max = float(np.abs(A.T @ b).max())
+    if as_operand:
+        A = SparseOperand.from_dense(A)
     return A, b.astype(np.float32), lam_max
 
 
-def make_svm_dataset(name: str, seed: int = 0, margin: float = 1.0
-                     ) -> Tuple[np.ndarray, np.ndarray]:
+def make_svm_dataset(name: str, seed: int = 0, margin: float = 1.0,
+                     as_operand: bool = False
+                     ) -> Tuple[object, np.ndarray]:
     """Returns (A, b) — linearly-separable-ish binary classification with
-    labels in {-1, +1}, mirroring the named regime."""
+    labels in {-1, +1}, mirroring the named regime.
+
+    margin controls separability: labels are the sign of the planted
+    scores plus noise scaled by 1/margin, so LARGER margin means LESS
+    label noise (more separable), margin -> inf means perfectly
+    separable. (The historical formula multiplied the noise BY margin —
+    larger "margin" made the problem noisier.) margin = 1, the default,
+    is bit-identical to the historical datasets.
+
+    as_operand: as in :func:`make_lasso_dataset`.
+    """
+    if margin <= 0:
+        raise ValueError(f"margin must be > 0, got {margin}")
     spec = SYNTHETIC_DATASETS[name]
     rng = np.random.default_rng(seed)
     A = _sparse_matrix(rng, spec.m, spec.n, spec.density)
     w = rng.standard_normal(spec.n).astype(np.float32)
     w /= np.linalg.norm(w)
     scores = A @ w
-    b = np.sign(scores + margin * 0.1 * rng.standard_normal(spec.m))
+    b = np.sign(scores + (0.1 / margin) * rng.standard_normal(spec.m))
     b[b == 0] = 1.0
+    if as_operand:
+        A = SparseOperand.from_dense(A)
     return A, b.astype(np.float32)

@@ -1,13 +1,16 @@
-"""Shared Pallas-vs-ref dispatch policy for the fused inner-loop kernels
-(``sa_inner`` for Lasso, ``svm_inner`` for SVM/K-SVM).
+"""Shared Pallas-vs-ref dispatch policy for the fused solver kernels
+(``sa_inner`` for Lasso, ``svm_inner`` for SVM/K-SVM, ``spmm`` for the
+sparse-operand products).
 
-Both kernels hold the (s*mu, s*mu) replicated Gram/kernel block resident
-in VMEM, so they share one budget: reject configurations whose G would
-not leave room (~16 MB on v5e; we cap the resident G at half of it).
-The chosen implementation is an explicit, queryable decision that warns
-ONCE per (kernel, s, mu) when a requested Pallas route has to fall back
-— the SA solvers surface it in ``SolverResult.aux["inner_impl"]`` so
-benchmarks never mislabel ref timings as Pallas.
+The inner-loop kernels hold the (s*mu, s*mu) replicated Gram/kernel
+block resident in VMEM; the blocked-ELL SpMM holds its dense right
+operand (plus the gathered values/indices and the output tile) resident.
+Both share one budget: reject configurations that would not leave room
+(~16 MB on v5e; we cap the resident working set at half of it). The
+chosen implementation is an explicit, queryable decision that warns
+ONCE per configuration when a requested Pallas route has to fall back
+— the solvers surface it in ``SolverResult.aux["inner_impl"]`` /
+``aux["spmm_impl"]`` so benchmarks never mislabel ref timings as Pallas.
 """
 from __future__ import annotations
 
@@ -22,6 +25,13 @@ def vmem_ok(s: int, mu: int) -> bool:
     return (s * mu) ** 2 * 4 <= _VMEM_G_BYTES_CAP
 
 
+def _warn_fallback(key, message: str) -> None:
+    if key in _warned:
+        return
+    _warned.add(key)
+    warnings.warn(message, stacklevel=4)
+
+
 def choose_inner_impl(name: str, s: int, mu: int,
                       use_pallas: bool) -> str:
     """"pallas" or "ref", warning once per (name, s, mu) on a forced
@@ -30,11 +40,35 @@ def choose_inner_impl(name: str, s: int, mu: int,
         return "ref"
     if vmem_ok(s, mu):
         return "pallas"
-    if (name, s, mu) not in _warned:
-        _warned.add((name, s, mu))
-        warnings.warn(
-            f"{name}: use_pallas=True but (s*mu)^2 Gram "
-            f"({(s * mu) ** 2 * 4} B) exceeds the VMEM cap "
-            f"({_VMEM_G_BYTES_CAP} B) for s={s}, mu={mu}; "
-            f"falling back to the jnp reference path", stacklevel=3)
+    _warn_fallback(
+        (name, s, mu),
+        f"{name}: use_pallas=True but (s*mu)^2 Gram "
+        f"({(s * mu) ** 2 * 4} B) exceeds the VMEM cap "
+        f"({_VMEM_G_BYTES_CAP} B) for s={s}, mu={mu}; "
+        f"falling back to the jnp reference path")
+    return "ref"
+
+
+def spmm_vmem_ok(R: int, K: int, C: int, Q: int) -> bool:
+    """Does the blocked-ELL SpMM working set — the VMEM-resident dense
+    right operand (C, Q) (lane-padded), the output (R, Q), and the
+    gathered values + int32 indices (R, K) each — fit the budget?"""
+    qp = -(-Q // 128) * 128
+    return (C * qp + R * qp + 2 * R * K) * 4 <= _VMEM_G_BYTES_CAP
+
+
+def choose_spmm_impl(R: int, K: int, C: int, Q: int,
+                     use_pallas: bool) -> str:
+    """"pallas" or "ref" for an (R, K) x (C, Q) blocked-ELL SpMM,
+    warning once per shape on a forced Pallas -> ref fallback."""
+    if not use_pallas:
+        return "ref"
+    if spmm_vmem_ok(R, K, C, Q):
+        return "pallas"
+    _warn_fallback(
+        ("spmm", R, K, C, Q),
+        f"spmm: use_pallas=True but the blocked-ELL working set for "
+        f"R={R}, K={K}, C={C}, Q={Q} exceeds the VMEM cap "
+        f"({_VMEM_G_BYTES_CAP} B); falling back to the jnp reference "
+        f"path")
     return "ref"

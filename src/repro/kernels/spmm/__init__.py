@@ -1,0 +1,6 @@
+from repro.kernels.spmm.ops import (ell_spmm, grouped_spmm_label,
+                                    scatter_add, scatter_dense,
+                                    scatter_steps, spmm_impl, spmm_vmem_ok)
+
+__all__ = ["ell_spmm", "grouped_spmm_label", "scatter_add",
+           "scatter_dense", "scatter_steps", "spmm_impl", "spmm_vmem_ok"]

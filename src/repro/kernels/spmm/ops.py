@@ -1,0 +1,100 @@
+"""Public wrapper for the blocked-ELL SpMM plus the gather/scatter
+companions the sparse solver paths are built from.
+
+Dispatch policy lives in ``repro.kernels.dispatch`` (shared with
+``sa_inner`` / ``svm_inner``): ``spmm_impl(R, K, C, Q, use_pallas)``
+returns the path that will actually run, warning once per shape about a
+forced Pallas -> ref fallback; the solvers stash the per-solve label in
+``SolverResult.aux["spmm_impl"]`` (``grouped_spmm_label`` handles the
+SA remainder group, whose shapes can dispatch differently).
+
+Padding contract (see ``repro.core.types.SparseOperand``): padded ELL
+slots hold index 0 and value 0, so every operation below is exact with
+no masking — padded slots gather row 0 of D scaled by 0, and padded
+scatter slots add 0 to position 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
+from repro.kernels.dispatch import spmm_vmem_ok
+from repro.kernels.spmm import ref as _ref
+from repro.kernels.spmm.kernel import ell_spmm_pallas
+
+
+def spmm_impl(R: int, K: int, C: int, Q: int, use_pallas: bool) -> str:
+    return dispatch.choose_spmm_impl(R, K, C, Q, use_pallas)
+
+
+def grouped_spmm_label(H: int, s: int, shape_fn, use_pallas: bool) -> str:
+    """The SpMM implementation(s) an SA grouped schedule actually runs:
+    ``shape_fn(s_grp) -> (R, K, C, Q)`` maps a group size to the SpMM
+    shape; the tail group (H mod s) can dispatch differently from the
+    full groups, in which case the label is "main+tail"-joined — same
+    convention as ``sa_loop.grouped_impl_label``."""
+    full, rem = divmod(H, s)
+    labels = ([spmm_impl(*shape_fn(s), use_pallas)] if full else []) \
+        + ([spmm_impl(*shape_fn(rem), use_pallas)] if rem else [])
+    if len(set(labels)) == 1:
+        return labels[0]
+    return "+".join(labels)
+
+
+def _pad_lanes(D, mult: int = 128):
+    pad = (-D.shape[1]) % mult
+    if pad == 0:
+        return D
+    return jnp.pad(D, ((0, 0), (0, pad)))
+
+
+@functools.partial(jax.jit, static_argnames=("ell_block", "use_pallas",
+                                             "interpret"))
+def ell_spmm(vals, idx, blocks, D, ell_block: int = 8,
+             use_pallas: bool = False, interpret: bool = False):
+    """out[r, q] = sum_k vals[r, k] * D[idx[r, k], q].
+
+    vals/idx: (R, K) padded ELL rows (K a multiple of ``ell_block``);
+    blocks: (R,) active K-block counts; D: (C, Q) dense. The ref path
+    accumulates in the promoted input dtype (f64-exact for the
+    equivalence tier); the Pallas path accumulates in f32 and pads D's
+    lane dimension to the MXU multiple (exact: padded lanes are sliced
+    back off).
+    """
+    R, K = vals.shape
+    C, Q = D.shape
+    if spmm_impl(R, K, C, Q, use_pallas or interpret) == "pallas":
+        out = ell_spmm_pallas(vals, idx, blocks, _pad_lanes(D),
+                              ell_block=ell_block, interpret=interpret)
+        return out[:, :Q]
+    return _ref.ell_spmm_ref(vals, idx, D)
+
+
+def scatter_dense(idx, vals, size: int):
+    """Densify gathered ELL rows: idx/vals (r, K) -> (size, r) whose
+    column j is the j-th gathered sparse row scattered into R^size —
+    the dense right-operand block the fused products append vectors to
+    (costs O(r * K) scatter-adds, not O(size * r) reads)."""
+    r = idx.shape[0]
+    return jnp.zeros((size, r), vals.dtype).at[
+        idx, jnp.arange(r)[:, None]].add(vals)
+
+
+def scatter_add(vec, idx, vals, coef):
+    """vec + sum_j coef[j] * (j-th gathered sparse row): the ELL form of
+    the deferred updates r += A_B dx / x += Y^T (b theta) — O(r * K)
+    scatter-adds instead of a dense GEMV."""
+    return vec.at[idx].add(vals * coef[:, None])
+
+
+def scatter_steps(idx, vals, coef, size: int):
+    """Per-step deferred vectors for the SA solvers: idx/vals
+    (s, mu, K), coef (s, mu) -> (s, size) whose row t is block t's
+    m-dimensional update  A_{B_t} dx_t  (the sparse analogue of the
+    dense ``einsum("msc,sc->sm", ...)``)."""
+    s = idx.shape[0]
+    return jnp.zeros((s, size), vals.dtype).at[
+        jnp.arange(s)[:, None, None], idx].add(vals * coef[..., None])

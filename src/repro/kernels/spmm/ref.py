@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the blocked-ELL SpMM.
+
+The contraction runs over the padded ELL width K in its storage order
+(ascending index within each row), one lane-sweep per ELL slot — a scan
+rather than a materialized (R, K, Q) gather so the oracle stays exact in
+the caller's dtype (f64 for the equivalence tier) without blowing memory
+when Q is large (the warm-start K(A, A) path has Q = m).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ell_spmm_ref(vals, idx, D):
+    """out[r, q] = sum_k vals[r, k] * D[idx[r, k], q].
+
+    vals: (R, K) gathered ELL values (padded slots hold 0).
+    idx:  (R, K) int32 indices into D's rows (padded slots hold 0 — they
+          contribute vals == 0 and are exact by construction).
+    D:    (C, Q) dense right operand.
+    Returns (R, Q) in the promoted input dtype (no forced f32).
+    """
+    R = vals.shape[0]
+    Q = D.shape[1]
+    out_dtype = jnp.promote_types(vals.dtype, D.dtype)
+
+    def body(acc, k):
+        return acc + vals[:, k, None] * D[idx[:, k]], None
+
+    out, _ = jax.lax.scan(body, jnp.zeros((R, Q), out_dtype),
+                          jnp.arange(vals.shape[1]))
+    return out

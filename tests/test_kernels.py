@@ -12,7 +12,8 @@ from repro.kernels.gram.ops import gram_and_proj, gram_t
 from repro.kernels.gram.ref import gram_and_proj_ref, gram_t_ref
 from repro.kernels.sa_inner.ops import sa_inner_loop
 from repro.kernels.sa_inner.ref import sa_inner_ref
-from repro.kernels import sa_inner, svm_inner
+from repro.kernels import sa_inner, spmm, svm_inner
+from repro.kernels.spmm.ref import ell_spmm_ref
 from repro.kernels.svm_inner.ops import svm_inner_loop
 from repro.kernels.svm_inner.ref import svm_inner_ref
 
@@ -120,6 +121,82 @@ def test_grouped_impl_label_mixed():
     assert grouped_impl_label(inner_impl, big_s + 1, big_s, 4, True) \
         == "ref+pallas"
     assert grouped_impl_label(inner_impl, 3, 8, 1, True) == "pallas"
+
+
+@pytest.mark.parametrize("R,C,Q,density", [(12, 40, 5, 0.3),
+                                           (33, 128, 17, 0.05),
+                                           (64, 200, 1, 0.5),
+                                           (7, 16, 130, 0.4)])
+def test_spmm_kernel_sweep(R, C, Q, density):
+    """Blocked-ELL SpMM: Pallas (interpret) vs jnp oracle vs dense,
+    including lane-padded Q and rows whose block counts differ."""
+    from repro.core.types import SparseOperand
+
+    rng = np.random.default_rng(R + C + Q)
+    S = rng.standard_normal((R, C)).astype(np.float32)
+    S[rng.random((R, C)) >= density] = 0.0
+    op = SparseOperand.from_dense(S)
+    D = jnp.asarray(rng.standard_normal((C, Q)).astype(np.float32))
+    dense = S @ np.asarray(D)
+    ref = spmm.ell_spmm(op.row_vals, op.row_cols, op.row_blocks, D,
+                        ell_block=op.ell_block)
+    pal = spmm.ell_spmm(op.row_vals, op.row_cols, op.row_blocks, D,
+                        ell_block=op.ell_block, interpret=True)
+    np.testing.assert_allclose(np.asarray(ref), dense, rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_spmm_ref_keeps_caller_dtype():
+    """The oracle accumulates in the caller's dtype rather than forcing
+    f32 — the f64 sparse-vs-dense 1e-10 tier (tests/test_sparse.py
+    subprocess) depends on this; here we pin the no-forced-cast
+    behavior in-process via bf16 (f64 needs a subprocess, see DESIGN.md
+    test conventions)."""
+    vals = jnp.asarray([[1.0, 2.0]], jnp.bfloat16)
+    idx = jnp.asarray([[0, 1]], jnp.int32)
+    out = ell_spmm_ref(vals, idx, jnp.eye(2, dtype=jnp.bfloat16))
+    assert out.dtype == jnp.bfloat16
+    out32 = ell_spmm_ref(vals.astype(jnp.float32), idx,
+                         jnp.eye(2, dtype=jnp.float32))
+    assert out32.dtype == jnp.float32
+
+
+def test_spmm_impl_contract():
+    """The dispatch decision is queryable, and an over-VMEM Pallas
+    request warns (once) and falls back to ref — same contract as the
+    inner-loop kernels."""
+    from repro.kernels import dispatch
+
+    assert spmm.spmm_impl(8, 8, 64, 9, False) == "ref"
+    assert spmm.spmm_impl(8, 8, 64, 9, True) == "pallas"
+    big = (4096, 64, 100_000, 256)          # resident D >> 8 MB cap
+    assert not spmm.spmm_vmem_ok(*big)
+    dispatch._warned.discard(("spmm",) + big)
+    with pytest.warns(UserWarning, match="falling back"):
+        assert spmm.spmm_impl(*big, True) == "ref"
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        assert spmm.spmm_impl(*big, True) == "ref"
+
+
+def test_grouped_spmm_label_mixed():
+    """A tail group whose shapes dispatch differently from the full
+    groups must surface both labels."""
+    shape_ok = lambda g: (g * 4, 8, 64, g * 4 + 1)
+    assert spmm.grouped_spmm_label(64, 8, shape_ok, True) == "pallas"
+    assert spmm.grouped_spmm_label(64, 8, shape_ok, False) == "ref"
+
+    def shape_mixed(g):                     # full groups over-VMEM
+        return (g, 64, 100_000, 256) if g > 4 else (g, 8, 64, g)
+
+    with pytest.warns(UserWarning, match="falling back"):
+        from repro.kernels import dispatch
+        dispatch._warned.discard(("spmm", 64, 64, 100_000, 256))
+        assert spmm.grouped_spmm_label(65, 64, shape_mixed, True) \
+            == "ref+pallas"
 
 
 ATTN_CASES = [

@@ -1,0 +1,475 @@
+"""Sparse-operand execution tier.
+
+Contracts under test:
+
+1. **Operand integrity** — ``SparseOperand``'s BCOO and blocked-ELL
+   forms agree with the dense matrix exactly (todense round-trip,
+   matvec/rmatvec, gathers), and the data layer's ``as_operand`` path
+   returns the SAME draw as the dense path (one RNG stream).
+2. **Sparse == dense equivalence** — every family x variant solves a
+   sparse-operand problem through ``repro.api.solve`` with f64
+   deviation <= 1e-10 vs the dense path, including SA remainder groups
+   (iterations % s != 0), collisions (small m), symmetric-gram packing,
+   warm starts, objective diagnostics, and the sharded backend. Per the
+   repo test convention (DESIGN.md) the f64 tiers run in subprocesses
+   (x64 must be configured before the first JAX use and would leak into
+   the main process); an f32 per-case sweep stays in-process for the
+   fast tier.
+3. **Bugfix regressions** — the inverted ``margin`` knob, the
+   ``best_s`` logreg branch, and the ksvm cost hook's hardcoded kernel.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.api import (LassoProblem, LogRegProblem, SVMProblem,
+                       SolverConfig, SparseOperand)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _sparse_matrix(seed, m, n, density=0.3, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((m, n)).astype(dtype)
+    A[rng.random((m, n)) >= density] = 0.0
+    # no empty columns (keeps Gram blocks nonzero, as in repro.data).
+    for j in np.flatnonzero(~(A != 0).any(axis=0)):
+        A[rng.integers(m), j] = 1.0
+    return A
+
+
+@pytest.fixture(scope="module")
+def sparse_problem_data():
+    m, n = 72, 46
+    A = _sparse_matrix(0, m, n)
+    rng = np.random.default_rng(1)
+    xt = np.zeros(n, np.float32)
+    xt[:6] = rng.standard_normal(6)
+    b = (A @ xt + 0.1 * rng.standard_normal(m)).astype(np.float32)
+    lam = 0.1 * float(np.abs(A.T @ b).max())
+    bs = np.sign(A @ rng.standard_normal(n).astype(np.float32)
+                 + 0.1 * rng.standard_normal(m)).astype(np.float32)
+    bs[bs == 0] = 1.0
+    return A, SparseOperand.from_dense(A), b, lam, bs
+
+
+# ---------------------------------------------------------------------------
+# 1. operand integrity.
+# ---------------------------------------------------------------------------
+
+def test_operand_roundtrip_exact(sparse_problem_data):
+    A, op, *_ = sparse_problem_data
+    assert op.shape == A.shape and op.ndim == 2
+    assert np.array_equal(np.asarray(op.todense()), A)
+    assert np.array_equal(np.asarray(op.to_bcoo().todense()), A)
+    assert op.nnz == int((A != 0).sum())
+    # blocked-ELL metadata: per-row active K-blocks cover the nnz.
+    row_nnz = (A != 0).sum(axis=1)
+    blocks = np.asarray(op.row_blocks)
+    assert np.all(blocks * op.ell_block >= row_nnz)
+    assert np.all((blocks - 1) * op.ell_block < np.maximum(row_nnz, 1))
+
+
+def test_operand_products_match_dense(sparse_problem_data):
+    A, op, *_ = sparse_problem_data
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal(A.shape[1]).astype(np.float32)
+    y = rng.standard_normal(A.shape[0]).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(op.matvec(x)), A @ x,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(op.rmatvec(y)), A.T @ y,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_operand_gathers_match_dense(sparse_problem_data):
+    from repro.kernels import spmm
+
+    A, op, *_ = sparse_problem_data
+    m, n = A.shape
+    cols = jnp.asarray([1, 7, 7, 30])       # with a collision
+    rows_g, vals_g, _ = op.gather_cols(cols)
+    assert np.array_equal(
+        np.asarray(spmm.scatter_dense(rows_g, vals_g, m)),
+        A[:, np.asarray(cols)])
+    ridx = jnp.asarray([0, 5, 5, 40])
+    cols_g, rvals_g, _ = op.gather_rows(ridx)
+    assert np.array_equal(
+        np.asarray(spmm.scatter_dense(cols_g, rvals_g, n)),
+        A[np.asarray(ridx)].T)
+
+
+def test_operand_from_bcoo_and_astype(sparse_problem_data):
+    A, op, *_ = sparse_problem_data
+    op2 = SparseOperand.from_bcoo(op.to_bcoo())
+    assert np.array_equal(np.asarray(op2.todense()), A)
+    op16 = op.astype(jnp.bfloat16)
+    assert op16.dtype == jnp.bfloat16
+    assert op16.bcoo.data.dtype == jnp.bfloat16
+    assert op16.shape == op.shape
+
+
+def test_operand_is_a_pytree(sparse_problem_data):
+    _, op, *_ = sparse_problem_data
+    leaves, treedef = jax.tree_util.tree_flatten(op)
+    op2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(op2, SparseOperand)
+    assert op2.ell_block == op.ell_block
+    doubled = jax.jit(lambda o: o.todense() * 2.0)(op)
+    np.testing.assert_allclose(np.asarray(doubled),
+                               2.0 * np.asarray(op.todense()))
+
+
+def test_operand_rejects_bad_shapes():
+    with pytest.raises(ValueError, match="matrix"):
+        SparseOperand.from_dense(np.zeros(4))
+    with pytest.raises(ValueError, match="ELL width"):
+        SparseOperand.from_dense(np.ones((4, 20)), row_width=8)
+
+
+def test_dataset_operand_same_rng_stream():
+    from repro.data.sparse import make_lasso_dataset, make_svm_dataset
+
+    A, b, lam = make_lasso_dataset("w1a-like", seed=3)
+    op, b2, lam2 = make_lasso_dataset("w1a-like", seed=3, as_operand=True)
+    assert isinstance(op, SparseOperand)
+    assert np.array_equal(np.asarray(op.todense()), A)
+    assert np.array_equal(b, b2) and lam == lam2
+    As, bs = make_svm_dataset("w1a-like", seed=3)
+    opS, bs2 = make_svm_dataset("w1a-like", seed=3, as_operand=True)
+    assert np.array_equal(np.asarray(opS.todense()), As)
+    assert np.array_equal(bs, bs2)
+
+
+# ---------------------------------------------------------------------------
+# 2. sparse == dense equivalence, family x variant.
+# ---------------------------------------------------------------------------
+
+# iterations=30 with s=8 forces a remainder tail group (30 % 8 != 0);
+# the small m/n of the fixture forces same-index collisions inside SA
+# groups.
+EQUIV_CASES = [
+    ("lasso-classical", "lasso", dict(block_size=4, s=1, accelerated=False)),
+    ("lasso-accelerated", "lasso", dict(block_size=4, s=1, accelerated=True)),
+    ("lasso-sa", "lasso", dict(block_size=4, s=8, accelerated=False)),
+    ("lasso-sa-acc", "lasso", dict(block_size=4, s=8, accelerated=True)),
+    ("lasso-sa-symmetric", "lasso",
+     dict(block_size=4, s=8, accelerated=True, symmetric_gram=True)),
+    ("svm-classical", "svm", dict(block_size=2, s=1)),
+    ("svm-sa", "svm", dict(block_size=2, s=8)),
+    ("ksvm-classical", "ksvm", dict(block_size=2, s=1)),
+    ("ksvm-sa", "ksvm", dict(block_size=2, s=8)),
+    ("logreg-classical", "logreg", dict(block_size=2, s=1)),
+    ("logreg-sa", "logreg", dict(block_size=2, s=8)),
+]
+
+
+def _problem(family, A, b, lam, bs):
+    if family == "lasso":
+        return LassoProblem(A=A, b=b, lam=lam)
+    if family == "svm":
+        return SVMProblem(A=A, b=bs, lam=1.0)
+    if family == "ksvm":
+        return SVMProblem(A=A, b=bs, lam=1.0, kernel="rbf",
+                          kernel_params={"gamma": 0.1})
+    return LogRegProblem(A=A, b=bs, lam=1e-3)
+
+
+def _deviation(res_a, res_b):
+    o1, o2 = np.asarray(res_a.objective), np.asarray(res_b.objective)
+    x1, x2 = np.asarray(res_a.x), np.asarray(res_b.x)
+    return max(
+        float(np.max(np.abs(o1 - o2) / np.maximum(np.abs(o1), 1e-9))),
+        float(np.max(np.abs(x1 - x2)) / max(float(np.max(np.abs(x1))),
+                                            1e-9)))
+
+
+@pytest.mark.parametrize("name,family,cfg_kw", EQUIV_CASES,
+                         ids=[c[0] for c in EQUIV_CASES])
+def test_sparse_matches_dense_local_f32(sparse_problem_data, name,
+                                        family, cfg_kw):
+    """In-process f32 sweep (same summands in a different order, so
+    roundoff-level deviation only); the 1e-10 acceptance bound runs in
+    f64 in the subprocess tier below."""
+    A, op, b, lam, bs = sparse_problem_data
+    cfg = SolverConfig(iterations=30, **cfg_kw)
+    res_d = api.solve(_problem(family, A, b, lam, bs), cfg)
+    res_s = api.solve(_problem(family, op, b, lam, bs), cfg)
+    dev = _deviation(res_d, res_s)
+    assert dev <= 2e-4, (name, dev)
+    # the use_pallas contract: the sparse solve surfaces its SpMM path.
+    assert res_s.aux.get("spmm_impl") == "ref"
+    assert "spmm_impl" not in res_d.aux
+
+
+def test_sparse_pallas_interpret_solver_parity(sparse_problem_data):
+    """The sparse SA-Lasso group product through the Pallas kernel
+    (interpret mode, f32) vs the ref path — solver-level parity of the
+    fused Gram/projection block, not just the kernel microtest."""
+    from repro.kernels import spmm
+
+    A, op, b, lam, bs = sparse_problem_data
+    flat = jnp.asarray([3, 9, 9, 17, 20, 44, 2, 8])
+    rows_g, vals_g, nnb_g = op.gather_cols(flat)
+    Yd = spmm.scatter_dense(rows_g, vals_g, A.shape[0])
+    r = jnp.asarray(-b)[:, None]
+    D = jnp.concatenate([Yd, r], axis=1)
+    ref = spmm.ell_spmm(vals_g, rows_g, nnb_g, D, ell_block=op.ell_block)
+    pal = spmm.ell_spmm(vals_g, rows_g, nnb_g, D, ell_block=op.ell_block,
+                        interpret=True)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    dense = A[:, np.asarray(flat)].T @ np.asarray(D)
+    np.testing.assert_allclose(np.asarray(pal), dense, rtol=1e-3,
+                               atol=1e-3)
+
+
+_F64_PRELUDE = r"""
+import dataclasses
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from repro import api
+from repro.api import (LassoProblem, LogRegProblem, SVMProblem,
+                       SolverConfig, SparseOperand)
+
+def sparse_matrix(seed, m, n, density=0.3):
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((m, n))
+    A[rng.random((m, n)) >= density] = 0.0
+    for j in np.flatnonzero(~(A != 0).any(axis=0)):
+        A[rng.integers(m), j] = 1.0
+    return A
+
+m, n = 72, 46
+A = sparse_matrix(0, m, n)
+rng = np.random.default_rng(1)
+xt = np.zeros(n); xt[:6] = rng.standard_normal(6)
+b = A @ xt + 0.1 * rng.standard_normal(m)
+lam = 0.1 * float(np.abs(A.T @ b).max())
+bs = np.sign(A @ rng.standard_normal(n) + 0.1 * rng.standard_normal(m))
+bs[bs == 0] = 1.0
+op = SparseOperand.from_dense(A)
+
+def problem(family, M):
+    if family == "lasso":
+        return LassoProblem(A=M, b=b, lam=lam)
+    if family == "svm":
+        return SVMProblem(A=M, b=bs, lam=1.0)
+    if family == "ksvm":
+        return SVMProblem(A=M, b=bs, lam=1.0, kernel="rbf",
+                          kernel_params={"gamma": 0.1})
+    return LogRegProblem(A=M, b=bs, lam=1e-3)
+
+def deviation(ra, rb):
+    o1, o2 = np.asarray(ra.objective), np.asarray(rb.objective)
+    x1, x2 = np.asarray(ra.x), np.asarray(rb.x)
+    return max(
+        float(np.max(np.abs(o1 - o2) / np.maximum(np.abs(o1), 1e-9))),
+        float(np.max(np.abs(x1 - x2)) / max(float(np.max(np.abs(x1))),
+                                            1e-9)))
+"""
+
+
+@pytest.mark.slow
+def test_sparse_matches_dense_f64():
+    """The acceptance tier: f64 <= 1e-10 per family x variant (incl. SA
+    remainder groups, collisions, symmetric-gram packing), plus warm
+    starts and the objective diagnostics — in a subprocess per the
+    repo's f64 convention."""
+    code = _F64_PRELUDE + r"""
+CASES = [
+    ("lasso", dict(block_size=4, s=1, accelerated=False)),
+    ("lasso", dict(block_size=4, s=1, accelerated=True)),
+    ("lasso", dict(block_size=4, s=8, accelerated=False)),
+    ("lasso", dict(block_size=4, s=8, accelerated=True)),
+    ("lasso", dict(block_size=4, s=8, accelerated=True,
+                   symmetric_gram=True)),
+    ("svm", dict(block_size=2, s=1)),
+    ("svm", dict(block_size=2, s=8)),
+    ("ksvm", dict(block_size=2, s=1)),
+    ("ksvm", dict(block_size=2, s=8)),
+    ("logreg", dict(block_size=2, s=1)),
+    ("logreg", dict(block_size=2, s=8)),
+]
+for family, kw in CASES:
+    cfg = SolverConfig(iterations=30, dtype=jnp.float64, **kw)
+    rd = api.solve(problem(family, A), cfg)
+    rs = api.solve(problem(family, op), cfg)
+    dev = deviation(rd, rs)
+    assert dev <= 1e-10, (family, kw, dev)
+    assert rs.aux.get("spmm_impl") == "ref"
+
+# warm starts thread the sparse path identically.
+cfg = SolverConfig(block_size=2, s=4, iterations=12, dtype=jnp.float64)
+for family in ("lasso", "svm", "ksvm", "logreg"):
+    cold = api.solve(problem(family, op), cfg)
+    x0 = np.asarray(cold.aux["alpha"]) if family in ("svm", "ksvm") \
+        else np.asarray(cold.x)
+    rd = api.solve(problem(family, A), cfg, x0=x0)
+    rs = api.solve(problem(family, op), cfg, x0=x0)
+    assert deviation(rd, rs) <= 1e-10, family
+
+# objective diagnostics accept operands.
+from repro.core import (dual_objective, kernel_dual_objective,
+                        lasso_objective, logreg_objective,
+                        primal_objective)
+x = np.random.default_rng(5).standard_normal(n)
+alpha = np.random.default_rng(6).uniform(0.0, 1.0, m)
+for fn, fam, arg in [(lasso_objective, "lasso", x),
+                     (dual_objective, "svm", alpha),
+                     (primal_objective, "svm", x),
+                     (kernel_dual_objective, "ksvm", alpha),
+                     (logreg_objective, "logreg", x)]:
+    d = abs(float(fn(problem(fam, A), arg))
+            - float(fn(problem(fam, op), arg)))
+    assert d < 1e-9, (fn.__name__, d)
+print("SPARSE_F64_OK")
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    assert "SPARSE_F64_OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_sparse_matches_dense_sharded():
+    """f64 <= 1e-10 dense-vs-sparse AND local-vs-sharded through the
+    generic driver (8 placeholder devices; the 90/44 shape is not a
+    multiple of 8, so the sparse pad/stack path is exercised)."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+""" + _F64_PRELUDE + r"""
+mesh_d = jax.make_mesh((8,), ("data",))
+mesh_m = jax.make_mesh((8,), ("model",))
+ms, ns = 90, 44
+As = sparse_matrix(3, ms, ns)
+rng = np.random.default_rng(4)
+xt = np.zeros(ns); xt[:5] = 1.0
+b = As @ xt + 0.1 * rng.standard_normal(ms)
+lam = 0.1 * float(np.abs(As.T @ b).max())
+bs = np.sign(As @ rng.standard_normal(ns) + 0.1 * rng.standard_normal(ms))
+bs[bs == 0] = 1.0
+ops = SparseOperand.from_dense(As)
+cfg = SolverConfig(block_size=2, iterations=22, s=4, dtype=jnp.float64)
+
+cases = [
+    (LassoProblem(A=As, b=b, lam=lam), mesh_d),
+    (SVMProblem(A=As, b=bs, lam=1.0), mesh_m),
+    (SVMProblem(A=As, b=bs, lam=1.0, kernel="rbf",
+                kernel_params={"gamma": 0.1}), mesh_m),
+    (LogRegProblem(A=As, b=bs, lam=1e-3), mesh_m),
+]
+for prob, mesh in cases:
+    dres = api.solve(prob, cfg, backend="sharded", mesh=mesh)
+    sprob = dataclasses.replace(prob, A=ops)
+    sres = api.solve(sprob, cfg, backend="sharded", mesh=mesh)
+    lres = api.solve(sprob, cfg)
+    o1, o2, o3 = (np.asarray(r.objective) for r in (dres, sres, lres))
+    assert np.max(np.abs(o1 - o2) / np.maximum(np.abs(o1), 1e-9)) < 1e-10
+    assert np.max(np.abs(o3 - o2) / np.maximum(np.abs(o3), 1e-9)) < 1e-10
+    assert np.max(np.abs(np.asarray(dres.x) - np.asarray(sres.x))) < 1e-10
+print("SPARSE_SHARDED_OK")
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    assert "SPARSE_SHARDED_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# 3. bugfix regressions.
+# ---------------------------------------------------------------------------
+
+def test_margin_larger_means_more_separable():
+    """Regression: larger ``margin`` used to INJECT more label noise
+    (sign(scores + margin*0.1*noise)); now it divides the noise."""
+    from repro.data.sparse import make_svm_dataset
+
+    # margin -> inf recovers the clean planted labels (noise / margin).
+    _, b_clean = make_svm_dataset("w1a-like", seed=0, margin=1e12)
+
+    def noise_rate(margin):
+        _, b = make_svm_dataset("w1a-like", seed=0, margin=margin)
+        return float(np.mean(b != b_clean))
+
+    r_tight, r_default, r_wide = (noise_rate(m) for m in (0.25, 1.0, 8.0))
+    assert r_wide < r_default < r_tight
+    with pytest.raises(ValueError, match="margin"):
+        make_svm_dataset("w1a-like", margin=0.0)
+
+
+def test_margin_default_bit_identical():
+    """margin=1 must reproduce the historical (pre-fix) datasets
+    bit-for-bit: sign(scores + (0.1/1)*noise) == the old
+    sign(scores + 1*0.1*noise)."""
+    from repro.data.sparse import SYNTHETIC_DATASETS, make_svm_dataset
+
+    spec = SYNTHETIC_DATASETS["w1a-like"]
+    rng = np.random.default_rng(7)
+    A_old = rng.standard_normal((spec.m, spec.n)).astype(np.float32)
+    mask = rng.random((spec.m, spec.n)) < spec.density
+    A_old = A_old * mask
+    empty = ~mask.any(axis=0)
+    if empty.any():
+        rows = rng.integers(0, spec.m, size=int(empty.sum()))
+        A_old[rows, np.flatnonzero(empty)] = \
+            rng.standard_normal(int(empty.sum())).astype(np.float32)
+    w = rng.standard_normal(spec.n).astype(np.float32)
+    w /= np.linalg.norm(w)
+    scores = A_old @ w
+    b_old = np.sign(scores + 1.0 * 0.1 * rng.standard_normal(spec.m))
+    b_old[b_old == 0] = 1.0
+    A_new, b_new = make_svm_dataset("w1a-like", seed=7)
+    assert np.array_equal(A_old, A_new)
+    assert np.array_equal(b_old.astype(np.float32), b_new)
+
+
+def test_best_s_logreg_branch_and_unknown_kind():
+    """Regression: best_s silently modeled kind="logreg" (and any other
+    non-lasso kind) with the SVM formula."""
+    from repro.core.cost_model import (Machine, ProblemDims, best_s,
+                                      logreg_speedup, svm_speedup)
+
+    dims = ProblemDims(m=100_000, n=10_000, f=0.01)
+    machine = Machine.cray_xc30()
+    s_star, sp = best_s(dims, H=10_000, mu=4, P=1024, machine=machine,
+                        kind="logreg")
+    assert sp == pytest.approx(
+        logreg_speedup(dims, 10_000, s_star, 1024, machine, 4))
+    svm_sp = svm_speedup(dims, 10_000, s_star, 1024, machine, 4)
+    assert sp != pytest.approx(svm_sp)
+    with pytest.raises(ValueError, match="unknown kind"):
+        best_s(dims, H=100, mu=1, P=64, machine=machine, kind="ridge")
+
+
+def test_ksvm_cost_hook_threads_kernel():
+    """Regression: the ksvm registry cost hook hardcoded kernel="rbf",
+    so poly/linear-kernelized problems reported rbf eval flops."""
+    from repro.core.cost_model import ProblemDims, svm_costs
+    from repro.core.types import FAMILIES
+    import repro.core.api  # noqa: F401  (populates FAMILIES)
+
+    dims = ProblemDims(m=100_000, n=10_000, f=0.01)
+    hook = FAMILIES["ksvm"].costs
+    assert hook(dims, 512, 4, 8, 128, kernel="poly") \
+        == svm_costs(dims, 512, 8, 128, mu=4, kernel="poly")
+    assert hook(dims, 512, 4, 8, 128, kernel="poly")["F"] \
+        != hook(dims, 512, 4, 8, 128, kernel="rbf")["F"]
+    # default (no kernel passed) stays the family's bench default, rbf.
+    assert hook(dims, 512, 4, 8, 128) \
+        == svm_costs(dims, 512, 8, 128, mu=4, kernel="rbf")
+    # registry-wide: every family's hook accepts the kernel argument.
+    for fam in FAMILIES.values():
+        c = fam.costs(dims, 512, 2, 4, 128, kernel="linear")
+        assert {"F", "L", "W", "M"} <= set(c), fam.name

@@ -1,6 +1,7 @@
 #!/usr/bin/env python
-"""Public-API-surface check: diff the exported names of ``repro.core``
-and ``repro.api`` against the checked-in ``api_surface.txt``.
+"""Public-API-surface check: diff the exported names of ``repro.core``,
+``repro.api`` and ``repro.kernels.spmm`` against the checked-in
+``api_surface.txt``.
 
     PYTHONPATH=src python tools/check_api_surface.py            # verify
     PYTHONPATH=src python tools/check_api_surface.py --update   # regen
@@ -19,7 +20,7 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SURFACE_FILE = os.path.join(ROOT, "api_surface.txt")
-MODULES = ("repro.core", "repro.api")
+MODULES = ("repro.core", "repro.api", "repro.kernels.spmm")
 
 
 def current_surface() -> list[str]:
