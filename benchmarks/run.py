@@ -2,8 +2,13 @@
 roofline/dry-run report. Prints ``name,us_per_call,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig2,table5,...]
+                                           [--smoke]
+
+``--smoke`` forwards ``smoke=True`` to every selected section that
+accepts it (density, tuned) — the CI-sized budgets.
 """
 import argparse
+import inspect
 import sys
 import traceback
 
@@ -14,9 +19,10 @@ SECTIONS = {}
 
 def _register():
     from benchmarks import paper_lasso, paper_svm, collective_count, \
-        density_sweep, roofline_bench
+        density_sweep, roofline_bench, tuned_vs_default
     SECTIONS.update({
         "density": density_sweep.main,
+        "tuned": tuned_vs_default.main,
         "fig2": paper_lasso.fig2_convergence,
         "table3": paper_lasso.table3_relative_error,
         "fig3": paper_lasso.fig3_runtime,
@@ -37,6 +43,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated section names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized budgets for sections that support it")
     args = ap.parse_args()
     _register()
     names = args.only.split(",") if args.only else list(SECTIONS)
@@ -44,7 +52,12 @@ def main() -> None:
     failures = 0
     for name in names:
         try:
-            SECTIONS[name]()
+            fn = SECTIONS[name]
+            if args.smoke and \
+                    "smoke" in inspect.signature(fn).parameters:
+                fn(smoke=True)
+            else:
+                fn()
         except Exception:
             failures += 1
             print(f"{name},0.00,SECTION_ERROR", flush=True)

@@ -1,0 +1,158 @@
+"""Tuned vs default: does closing the model -> measurement loop pay?
+
+    PYTHONPATH=src python -m benchmarks.tuned_vs_default [--smoke]
+
+For each synthetic regime x family, run the full ``repro.tune`` loop
+with a FRESH calibration (no cache) and record into
+``results/perf/tuned.json``:
+
+* the calibration evidence — measured vs calibrated-model predicted
+  seconds for every pilot-grid point (acceptance bar: every point
+  within 2x);
+* the head-to-head — the tuner-selected config vs the benchmark-default
+  config (the (s, mu) the earlier benchmarks hardcode) at the full
+  iteration budget (acceptance bar: tuned no slower than default).
+  When the selection differs from the default, the reported times ARE
+  the incumbent guard's own full-budget measurements (best-of-3 via
+  ``measure_solve``) — a selection that loses that head-to-head is
+  discarded in favor of the default before it is ever reported;
+  ``repeats`` only applies to the fallback measurement when the tuner
+  kept the default outright.
+
+``--smoke`` shrinks the pilot/measure budgets for CI; the committed
+json comes from a full run.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+from benchmarks.common import emit, header
+
+from repro import tune as tune_mod
+from repro.api import (LassoProblem, LogRegProblem, SolverConfig,
+                       resolve_family)
+from repro.data.sparse import make_lasso_dataset, make_svm_dataset
+from repro.tune.calibrate import measure_solve, problem_dims
+from repro.tune.select import predicted_solve_time
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "perf", "tuned.json")
+
+
+def _lasso_problem(regime: str):
+    A, b, lam_max = make_lasso_dataset(regime, seed=0)
+    return LassoProblem(A=A, b=b, lam=0.1 * lam_max)
+
+
+def _logreg_problem(regime: str):
+    A, b = make_svm_dataset(regime, seed=0)
+    return LogRegProblem(A=A, b=b, lam=1e-3)
+
+
+# regime x family cases; the default (s, mu) mirrors what the earlier
+# benchmarks hardcode (density_sweep / paper_lasso style defaults).
+# Both regimes are the paper's sparse n >= m shapes, where the fused
+# Gram/cross GEMMs behave like the model's flop term. (covtype-like,
+# m >> n, is a known model limit: its s-fold flop growth is masked by
+# s-fold BLAS efficiency growth, so no single gamma fits the s sweep —
+# see DESIGN.md "Autotuning".)
+CASES = (
+    ("news20-like", "lasso", _lasso_problem),
+    ("url-like", "lasso", _lasso_problem),
+    ("news20-like", "logreg", _logreg_problem),
+    ("url-like", "logreg", _logreg_problem),
+)
+
+
+def run_case(regime: str, family: str, make_problem, H: int,
+             pilot_iters: int, repeats: int) -> dict:
+    problem = make_problem(regime)
+    fam = resolve_family(problem)
+    default = SolverConfig(block_size=8, s=16, iterations=H,
+                           accelerated=False, track_objective=False)
+    res = tune_mod.tune(problem, default, family=fam, cache=False,
+                        pilot_iters=pilot_iters, guard_iters=H)
+    tuned = res.config
+
+    same = (tuned.s, tuned.block_size, tuned.use_pallas,
+            tuned.symmetric_gram) == \
+           (default.s, default.block_size, default.use_pallas,
+            default.symmetric_gram)
+    if res.guard_times is not None:
+        # the incumbent guard already measured this exact head-to-head
+        # at the full H budget — reuse it instead of re-timing two
+        # full solves (the dominant cost of this section).
+        t_default = res.guard_times["incumbent_s"]
+        t_tuned = t_default if same else res.guard_times["selected_s"]
+    else:
+        t_default = measure_solve(problem, fam, default,
+                                  repeats=repeats)
+        t_tuned = t_default if same \
+            else measure_solve(problem, fam, tuned, repeats=repeats)
+
+    dims = problem_dims(problem)
+    kernel = getattr(problem, "kernel", "linear")
+    row = {
+        "regime": regime, "family": fam.name,
+        "m": dims.m, "n": dims.n, "f": dims.f, "H": H,
+        "machine": dataclasses.asdict(res.machine),
+        "calibration": res.calibration.to_dict(),
+        "calibration_max_ratio": res.calibration.max_ratio,
+        "default": {"s": default.s, "mu": default.block_size},
+        "tuned": {"s": tuned.s, "mu": tuned.block_size,
+                  "use_pallas": tuned.use_pallas,
+                  "symmetric_gram": tuned.symmetric_gram},
+        "predicted_default_s": predicted_solve_time(
+            fam, dims, default, res.machine, kernel=kernel),
+        "predicted_tuned_s": predicted_solve_time(
+            fam, dims, tuned, res.machine, kernel=kernel),
+        "default_s": t_default, "tuned_s": t_tuned,
+        "speedup": t_default / t_tuned,
+    }
+    emit(f"tuned/{regime}/{fam.name}", t_tuned * 1e6,
+         f"default_us={t_default * 1e6:.0f};"
+         f"speedup={row['speedup']:.2f};"
+         f"s={tuned.s};mu={tuned.block_size};"
+         f"calib_max_ratio={res.calibration.max_ratio:.2f}")
+    return row
+
+
+def main(smoke: bool = False):
+    if smoke:
+        H, pilot_iters, repeats = 48, 16, 2
+    else:
+        H, pilot_iters, repeats = 192, 48, 5
+    rows = [run_case(regime, family, make, H, pilot_iters, repeats)
+            for regime, family, make in CASES]
+    worst_ratio = max(r["calibration_max_ratio"] for r in rows)
+    min_speedup = min(r["speedup"] for r in rows)
+    payload = {"cases": rows, "smoke": smoke,
+               "worst_calibration_ratio": worst_ratio,
+               "min_speedup": min_speedup}
+    with open(OUT_PATH, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    print(f"wrote {os.path.normpath(OUT_PATH)} "
+          f"(worst calibration ratio {worst_ratio:.2f}, "
+          f"min tuned speedup {min_speedup:.2f})")
+    # acceptance bars: strict for the full run (the committed json);
+    # smoke mode measures sub-100ms solves best-of-2 on shared CI
+    # runners, so it gates with noise headroom instead of flaking.
+    ratio_bar, speedup_bar = (3.0, 0.85) if smoke else (2.0, 0.97)
+    assert worst_ratio <= ratio_bar, \
+        f"calibrated model off by >{ratio_bar}x on a pilot point: " \
+        f"{worst_ratio}"
+    assert min_speedup >= speedup_bar, \
+        f"tuner-selected config measurably slower than default: " \
+        f"{min_speedup}"
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small pilot/measure budgets (CI)")
+    args = ap.parse_args()
+    header()
+    main(smoke=args.smoke)

@@ -304,6 +304,7 @@ def solve(problem, cfg: Optional[SolverConfig] = None,
           family: Optional[object] = None,
           axis_name=None, mesh: Optional[Mesh] = None,
           axes: Optional[AxisNames] = None, x0=None,
+          tune: Optional[str] = None,
           callbacks: Optional[Sequence[Callable]] = None) -> SolverResult:
     """Solve any registered problem family on any registered backend.
 
@@ -318,6 +319,15 @@ def solve(problem, cfg: Optional[SolverConfig] = None,
               x, SVM/K-SVM dual alpha, logreg w) — threaded through to
               every solver; the objective trace resumes where a previous
               solve's left off.
+    tune:     ``"auto"`` replaces cfg's tunables (s, block_size,
+              use_pallas, symmetric_gram) with ``repro.tune.autotune``'s
+              calibrated-model selection before solving — iterations,
+              dtype, seed etc. are preserved, and the calibrated machine
+              is cached per host/regime under ``results/tuned/`` so only
+              the first solve of a regime pays the pilot measurements.
+              The config actually used lands in
+              ``result.aux["tuned_config"]``. None/"off" solves cfg
+              as given.
     callbacks: optional callables, each invoked as ``cb(result)`` after
               the solve (the solvers are single jitted programs, so
               per-iteration hooks would force a host round-trip; consume
@@ -329,8 +339,29 @@ def solve(problem, cfg: Optional[SolverConfig] = None,
     if backend not in BACKENDS:
         raise ValueError(
             f"unknown backend {backend!r}; registered: {sorted(BACKENDS)}")
+    tuned = False
+    if tune not in (None, False, "off"):
+        if tune not in ("auto", True):
+            raise ValueError(
+                f"unknown tune mode {tune!r}; expected 'auto' (or "
+                f"None/'off' to solve cfg as given)")
+        if backend != "local":
+            # autotune calibrates with LOCAL single-host pilot solves
+            # and selects at P=1 — silently applying that to a sharded
+            # solve would tune for the wrong machine and topology.
+            raise ValueError(
+                "tune='auto' only supports backend='local' (pilot "
+                "solves run unsharded at P=1); for a sharded solve, "
+                "call repro.tune.select_config explicitly with a "
+                "calibrated/hand-built Machine and P = the shard "
+                "count")
+        from repro import tune as tune_mod
+        cfg = tune_mod.autotune(problem, cfg, family=fam)
+        tuned = True
     result = BACKENDS[backend](fam, problem, cfg, axis_name=axis_name,
                                mesh=mesh, axes=axes, x0=x0)
+    if tuned:
+        result.aux["tuned_config"] = cfg
     for cb in callbacks or ():
         cb(result)
     return result

@@ -149,9 +149,48 @@ def logreg_speedup(dims: ProblemDims, H: int, s: int, P: int,
     return t1 / ts
 
 
+# The machine model is LINEAR in the machine parameters: T = theta . c
+# with theta = (gamma, beta, alpha, kappa) and c = (F, W, L, I). The
+# autotuner (repro.tune) exploits this — calibration is a (weighted)
+# least-squares fit of theta to measured pilot solves, so the per-term
+# cost vectors are public alongside the summed predicted_time.
+COST_TERMS = ("F", "W", "L", "I")
+
+
+def cost_vector(costs: Dict[str, float]):
+    """The (F, W, L, I) per-term cost vector of a Table-I cost dict —
+    the calibration feature row for one (s, mu) configuration. F/W/L
+    are required (a malformed costs hook must fail loudly, not predict
+    a near-zero time the tuner would then 'prefer'); I defaults to 0
+    for cost dicts that predate the kappa term."""
+    return (float(costs["F"]), float(costs["W"]), float(costs["L"]),
+            float(costs.get("I", 0.0)))
+
+
+def machine_vector(machine: Machine):
+    """(gamma, beta, alpha, kappa) — the parameter vector paired with
+    :func:`cost_vector` (same term order)."""
+    return (machine.gamma, machine.beta, machine.alpha, machine.kappa)
+
+
+def machine_from_vector(vec, name: str = "calibrated") -> Machine:
+    """Inverse of :func:`machine_vector`."""
+    gamma, beta, alpha, kappa = (float(v) for v in vec)
+    return Machine(name=name, alpha=alpha, beta=beta, gamma=gamma,
+                   kappa=kappa)
+
+
+def time_breakdown(costs: Dict[str, float], machine: Machine
+                   ) -> Dict[str, float]:
+    """Per-term seconds — which of flops / bandwidth / latency /
+    per-iteration overhead dominates a configuration's predicted time."""
+    return {term: p * c for term, p, c in
+            zip(COST_TERMS, machine_vector(machine), cost_vector(costs))}
+
+
 def predicted_time(costs: Dict[str, float], machine: Machine) -> float:
-    return machine.gamma * costs["F"] + machine.beta * costs["W"] \
-        + machine.alpha * costs["L"] + machine.kappa * costs.get("I", 0.0)
+    return sum(p * c for p, c in
+               zip(machine_vector(machine), cost_vector(costs)))
 
 
 def lasso_speedup(dims: ProblemDims, H: int, mu: int, s: int, P: int,

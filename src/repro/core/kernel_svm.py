@@ -296,7 +296,8 @@ def sa_kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
     return SolverResult(x=x, objective=objs,
                         aux={"alpha": alpha, "dual": dual, "f": f,
                              "inner_impl": grouped_impl_label(
-                                 inner_impl, H, s, mu, cfg.use_pallas),
+                                 inner_impl, H, s, mu, cfg.use_pallas,
+                                 jnp.dtype(cfg.dtype).itemsize),
                              **spmm_aux(A, cfg, "cross", H=H)})
 
 
@@ -349,6 +350,9 @@ def _cli_describe(args, res, elapsed: float) -> str:
     bench_block_size=2,
     bench_problem_kwargs={"lam": 1.0, "kernel": "rbf",
                           "kernel_params": {"gamma": 0.1}},
+    # the kernelized message is the (m, s*mu) cross block — replicated
+    # memory grows with s*mu, so the candidate grid stays smaller.
+    tune_space={"s": (1, 2, 4, 8, 16, 32), "mu": (1, 2, 4, 8)},
 )
 def solve_ksvm(problem: SVMProblem, cfg: SolverConfig,
                axis_name: Optional[object] = None,

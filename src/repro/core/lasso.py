@@ -29,12 +29,49 @@ from repro.core.types import (LassoProblem, SolverConfig, SolverResult,
                               register_family, require_unit_block)
 
 
+def _validate_groups(groups, n: int, mu: int) -> None:
+    """Enforce the documented group-lasso contract (DESIGN.md): groups
+    are contiguous, equal-sized blocks of exactly mu coordinates.
+
+    Both violations used to be silent wrong answers: with mu not
+    dividing n, ``n_groups = n // mu`` drops the last ``n % mu``
+    coordinates from the sampler — they are never updated; a groups
+    array that isn't contiguous mu-blocks makes the block prox shrink
+    sets of coordinates that aren't the declared groups.
+    """
+    import numpy as np
+    if n % mu != 0:
+        raise ValueError(
+            f"group lasso requires block_size (the group size) to divide "
+            f"n: got n={n}, block_size={mu} — the trailing {n % mu} "
+            f"coordinates would never be sampled or updated")
+    g = np.asarray(groups)
+    if g.shape != (n,):
+        raise ValueError(
+            f"groups must be an (n,) array of group ids; got shape "
+            f"{g.shape} for n={n}")
+    # contract: each consecutive mu-sized block carries ONE group id,
+    # and no id spans two blocks. The ids themselves may be any
+    # distinct labels (the prox is blockwise and the objective
+    # partitions by label, so relabeling does not change the solve).
+    blocks = g.reshape(n // mu, mu)
+    uniform = (blocks == blocks[:, :1]).all()
+    labels = blocks[:, 0]
+    if not uniform or len(np.unique(labels)) != labels.size:
+        raise ValueError(
+            "groups must label contiguous, equal-sized blocks of "
+            "block_size coordinates (one distinct group id per "
+            "mu-sized block); the provided array does not — reorder "
+            "the features or adjust cfg.block_size to the group size")
+
+
 def _prep(problem: LassoProblem, cfg: SolverConfig):
     A = prep_operand(problem.A, cfg.dtype)
     b = jnp.asarray(problem.b, cfg.dtype)
     n = A.shape[1]
     mu = cfg.block_size
     if problem.groups is not None:
+        _validate_groups(problem.groups, n, mu)
         n_groups = n // mu
         q = n_groups
         def sampler(key):
@@ -83,7 +120,7 @@ def bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
         GR = linalg.preduce(local, axis_name)
         G, rh = GR[:, :mu], GR[:, mu]
         v = linalg.power_iteration_max_eig(G, cfg.power_iters)
-        eta = 1.0 / v
+        eta = 1.0 / linalg.floor_eig(v)   # floored: zero block -> no-op
         g = x[idx] - eta * rh
         dx = prox(g, eta) - x[idx]
         x = x.at[idx].add(dx)
@@ -139,7 +176,7 @@ def acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
         GR = linalg.preduce(local, axis_name)
         G, rh = GR[:, :mu], GR[:, mu]
         v = linalg.power_iteration_max_eig(G, cfg.power_iters)   # line 10
-        eta = 1.0 / (q * th_prev * v)                     # line 11
+        eta = 1.0 / linalg.floor_eig(q * th_prev * v)     # line 11 (floored)
         g = z[idx] - eta * rh                             # line 12
         dz = prox(g, eta) - z[idx]                        # line 13
         z = z.at[idx].add(dz)                             # line 14
@@ -228,6 +265,7 @@ def _cli_describe(args, res, elapsed: float) -> str:
     default_mu=8,
     bench_block_size=4,
     bench_problem_kwargs={"lam": 0.1},
+    supports_symmetric_gram=True,
 )
 def solve_lasso(problem: LassoProblem, cfg: SolverConfig,
                 axis_name: Optional[object] = None,

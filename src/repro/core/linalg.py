@@ -28,6 +28,28 @@ def power_iteration_max_eig(G, iters: int = 32):
     return v @ (G @ v)
 
 
+def floor_eig(v):
+    """Floor a Gram-block eigenvalue (or the step-size denominator built
+    from it) at the smallest positive normal of its dtype before it
+    becomes a 1/v step size.
+
+    A sampled column block that is all zeros (user-supplied data — the
+    synthetic generators guard empty columns, arbitrary dense or sparse
+    operands don't) has ``power_iteration_max_eig(G) == 0`` exactly, and
+    ``eta = 1/0 = inf`` then meets the equally-zero projection as
+    ``inf * 0 = NaN``, poisoning the iterate forever. Flooring keeps eta
+    finite, and since the projection of a zero block is exactly 0 the
+    prox step stays a no-op for it. For any nonzero eigenvalue
+    ``maximum(v, tiny)`` returns v bit-for-bit, so regular solves are
+    unchanged. The accelerated solvers floor the whole ``q * theta * v``
+    denominator (flooring v alone can still underflow to a subnormal
+    whose reciprocal overflows once q * theta < 1); the Pallas
+    ``sa_inner`` kernel applies the same floor at f32, its compute
+    dtype, to preserve kernel/ref parity.
+    """
+    return jnp.maximum(v, jnp.finfo(jnp.result_type(v)).tiny)
+
+
 def theta_schedule(theta0, num: int, q: float):
     """Pre-compute the APPROX acceleration scalars.
 

@@ -172,6 +172,8 @@ def _cli_describe(args, res, elapsed: float) -> str:
     default_mu=4,
     bench_block_size=2,
     bench_problem_kwargs={"lam": 1e-3},
+    # same (m, s*mu) cross-block message shape as the kernel SVM.
+    tune_space={"s": (1, 2, 4, 8, 16, 32), "mu": (1, 2, 4, 8)},
 )
 def solve_logreg(problem: LogRegProblem, cfg: SolverConfig,
                  axis_name: Optional[object] = None,

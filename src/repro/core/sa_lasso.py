@@ -132,7 +132,7 @@ def sa_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
             mask = (jnp.arange(s) < j).astype(cfg.dtype)
             rj = r_proj[j] + jnp.einsum("t,tp->p", mask, cross)
             v = linalg.power_iteration_max_eig(Gj[:, j, :], cfg.power_iters)
-            eta = 1.0 / v
+            eta = 1.0 / linalg.floor_eig(v)  # floored: zero block -> no-op
             g = x[idx_j] - eta * rj
             dx = prox(g, eta) - x[idx_j]
             x = x.at[idx_j].add(dx)
@@ -233,7 +233,7 @@ def sa_acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
                 - jnp.einsum("t,t,tp->p", mask, coef_t, cross)
             v = linalg.power_iteration_max_eig(Gj[:, j, :],
                                                cfg.power_iters)  # line 14
-            eta = 1.0 / (q * thp * v)                     # line 15
+            eta = 1.0 / linalg.floor_eig(q * thp * v)     # line 15 (floored)
             g = z[idx_j] - eta * rj                       # Eq. (4)
             dz = prox(g, eta) - z[idx_j]                  # Eq. (5)
             z = z.at[idx_j].add(dz)                       # line 19

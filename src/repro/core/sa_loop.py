@@ -27,15 +27,17 @@ def run_grouped(group, carry, H: int, s: int, dtype):
 
 
 def grouped_impl_label(impl_fn, H: int, s: int, mu: int,
-                       use_pallas: bool) -> str:
+                       use_pallas: bool, itemsize: int = 4) -> str:
     """The inner-loop implementation(s) the grouped schedule actually
     runs: the tail group dispatches at (H mod s, mu), which can differ
     from the full groups' (s, mu) — e.g. an over-VMEM s falls back to
     "ref" while a small tail still runs "pallas". Mixed runs are
-    labeled "main+tail" so benchmarks never mislabel the timings."""
+    labeled "main+tail" so benchmarks never mislabel the timings.
+    ``itemsize`` is the solve dtype's bytes/element (the VMEM guards are
+    dtype-aware)."""
     K, rem = divmod(H, s)
-    labels = ([impl_fn(s, mu, use_pallas)] if K else []) \
-        + ([impl_fn(rem, mu, use_pallas)] if rem else [])
+    labels = ([impl_fn(s, mu, use_pallas, itemsize)] if K else []) \
+        + ([impl_fn(rem, mu, use_pallas, itemsize)] if rem else [])
     if len(set(labels)) == 1:
         return labels[0]
     return "+".join(labels)

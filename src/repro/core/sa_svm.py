@@ -116,7 +116,8 @@ def sa_bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
     return SolverResult(x=x, objective=objs,
                         aux={"alpha": alpha, "dual": dual,
                              "inner_impl": grouped_impl_label(
-                                 inner_impl, H, s, mu, cfg.use_pallas),
+                                 inner_impl, H, s, mu, cfg.use_pallas,
+                                 jnp.dtype(cfg.dtype).itemsize),
                              **spmm_aux(A, cfg, "row_gram", H=H,
                                         extra=1)})
 

@@ -157,10 +157,13 @@ def spmm_aux(A, cfg, kind: str, H=None, extra: int = 0) -> dict:
             return (A.shape[0], K, C, g * mu)
     else:
         raise ValueError(f"unknown spmm layout kind {kind!r}")
+    itemsize = jnp.dtype(cfg.dtype).itemsize
     if H is None:
-        return {"spmm_impl": spmm.spmm_impl(*shape(1), cfg.use_pallas)}
+        return {"spmm_impl": spmm.spmm_impl(*shape(1), cfg.use_pallas,
+                                            itemsize)}
     return {"spmm_impl": spmm.grouped_spmm_label(H, cfg.s, shape,
-                                                 cfg.use_pallas)}
+                                                 cfg.use_pallas,
+                                                 itemsize)}
 
 
 def cross_block(A, YT, use_pallas: bool = False):

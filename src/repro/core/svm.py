@@ -194,6 +194,7 @@ def _cli_describe(args, res, elapsed: float) -> str:
     default_mu=1,
     bench_block_size=1,
     bench_problem_kwargs={"lam": 1.0},
+    supports_symmetric_gram=True,
 )
 def solve_svm(problem: SVMProblem, cfg: SolverConfig,
               axis_name: Optional[object] = None,

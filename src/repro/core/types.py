@@ -482,6 +482,15 @@ class ProblemFamily:
     default_mu: CLI default block size.
     bench_problem_kwargs / bench_block_size: how benchmarks instantiate a
                 representative problem (collective counts, lowering).
+    tune_space: the autotuner's candidate grid for this family —
+                ``{"s": (...), "mu": (...)}``; ``repro.tune.select``
+                sweeps the declared candidates through the ``costs``
+                hook (families with structurally constrained blocks,
+                e.g. group lasso, are further restricted there).
+    supports_symmetric_gram: whether the family's SA solvers honor
+                ``cfg.symmetric_gram`` (triangle-packed Gram Allreduce)
+                — the tuner only recommends it where it changes the
+                executed message.
     """
 
     name: str
@@ -501,6 +510,10 @@ class ProblemFamily:
     bench_block_size: int = 1
     bench_problem_kwargs: Mapping[str, Any] = \
         dataclasses.field(default_factory=dict)
+    tune_space: Mapping[str, Any] = dataclasses.field(
+        default_factory=lambda: {"s": (1, 2, 4, 8, 16, 32, 64),
+                                 "mu": (1, 2, 4, 8, 16)})
+    supports_symmetric_gram: bool = False
 
     def __post_init__(self):
         if self.partition not in ("row", "col"):

@@ -21,8 +21,13 @@ _VMEM_G_BYTES_CAP = 8 * 1024 * 1024
 _warned = set()
 
 
-def vmem_ok(s: int, mu: int) -> bool:
-    return (s * mu) ** 2 * 4 <= _VMEM_G_BYTES_CAP
+def vmem_ok(s: int, mu: int, itemsize: int = 4) -> bool:
+    """Does the (s*mu)^2 Gram block fit the budget at ``itemsize``
+    bytes/element? The guards were historically dtype-blind (hardcoded
+    4 B/element) — an f64 solve holds f64 residents, so near-cap configs
+    dispatched Pallas with TWICE the modeled VMEM. Callers thread the
+    solve dtype's itemsize through."""
+    return (s * mu) ** 2 * itemsize <= _VMEM_G_BYTES_CAP
 
 
 def _warn_fallback(key, message: str) -> None:
@@ -33,42 +38,46 @@ def _warn_fallback(key, message: str) -> None:
 
 
 def choose_inner_impl(name: str, s: int, mu: int,
-                      use_pallas: bool) -> str:
-    """"pallas" or "ref", warning once per (name, s, mu) on a forced
-    Pallas -> ref fallback."""
+                      use_pallas: bool, itemsize: int = 4) -> str:
+    """"pallas" or "ref", warning once per (name, s, mu, itemsize) on a
+    forced Pallas -> ref fallback."""
     if not use_pallas:
         return "ref"
-    if vmem_ok(s, mu):
+    if vmem_ok(s, mu, itemsize):
         return "pallas"
     _warn_fallback(
-        (name, s, mu),
+        (name, s, mu, itemsize),
         f"{name}: use_pallas=True but (s*mu)^2 Gram "
-        f"({(s * mu) ** 2 * 4} B) exceeds the VMEM cap "
-        f"({_VMEM_G_BYTES_CAP} B) for s={s}, mu={mu}; "
-        f"falling back to the jnp reference path")
+        f"({(s * mu) ** 2 * itemsize} B at {itemsize} B/element) "
+        f"exceeds the VMEM cap ({_VMEM_G_BYTES_CAP} B) for s={s}, "
+        f"mu={mu}; falling back to the jnp reference path")
     return "ref"
 
 
-def spmm_vmem_ok(R: int, K: int, C: int, Q: int) -> bool:
+def spmm_vmem_ok(R: int, K: int, C: int, Q: int,
+                 itemsize: int = 4) -> bool:
     """Does the blocked-ELL SpMM working set — the VMEM-resident dense
     right operand (C, Q) (lane-padded), the output (R, Q), and the
-    gathered values + int32 indices (R, K) each — fit the budget?"""
+    gathered values (R, K), all at ``itemsize`` bytes/element, plus the
+    int32 indices (R, K) at 4 B — fit the budget?"""
     qp = -(-Q // 128) * 128
-    return (C * qp + R * qp + 2 * R * K) * 4 <= _VMEM_G_BYTES_CAP
+    return (C * qp + R * qp + R * K) * itemsize + R * K * 4 \
+        <= _VMEM_G_BYTES_CAP
 
 
 def choose_spmm_impl(R: int, K: int, C: int, Q: int,
-                     use_pallas: bool) -> str:
+                     use_pallas: bool, itemsize: int = 4) -> str:
     """"pallas" or "ref" for an (R, K) x (C, Q) blocked-ELL SpMM,
-    warning once per shape on a forced Pallas -> ref fallback."""
+    warning once per (shape, itemsize) on a forced Pallas -> ref
+    fallback."""
     if not use_pallas:
         return "ref"
-    if spmm_vmem_ok(R, K, C, Q):
+    if spmm_vmem_ok(R, K, C, Q, itemsize):
         return "pallas"
     _warn_fallback(
-        ("spmm", R, K, C, Q),
+        ("spmm", R, K, C, Q, itemsize),
         f"spmm: use_pallas=True but the blocked-ELL working set for "
-        f"R={R}, K={K}, C={C}, Q={Q} exceeds the VMEM cap "
-        f"({_VMEM_G_BYTES_CAP} B); falling back to the jnp reference "
-        f"path")
+        f"R={R}, K={K}, C={C}, Q={Q} at {itemsize} B/element exceeds "
+        f"the VMEM cap ({_VMEM_G_BYTES_CAP} B); falling back to the "
+        f"jnp reference path")
     return "ref"

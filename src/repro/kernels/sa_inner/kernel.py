@@ -26,6 +26,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.common import power_iter_max_eig
 
+_F32_TINY = float(jnp.finfo(jnp.float32).tiny)
+
 
 def _make_kernel(s: int, mu: int, q: float, lam1: float, lam2: float,
                  power_iters: int):
@@ -59,7 +61,10 @@ def _make_kernel(s: int, mu: int, q: float, lam1: float, lam2: float,
             # mu = 1: the diagonal "block" is the eigenvalue itself.
             vmax = Gjj[0, 0] if mu == 1 \
                 else power_iter_max_eig(Gjj, power_iters)
-            eta = 1.0 / (q * thp * vmax)
+            # same floor as linalg.floor_eig at the kernel's f32 compute
+            # dtype: an all-zero block otherwise yields eta = inf and
+            # inf * 0 = NaN against its zero projection.
+            eta = 1.0 / jnp.maximum(q * thp * vmax, _F32_TINY)
 
             # collision-corrected z at this block's coordinates.
             idx_j = pl.load(idx_ref, (pl.dslice(j, 1), slice(None)))  # (1, mu)

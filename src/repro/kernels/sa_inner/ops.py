@@ -10,6 +10,7 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import dispatch
 from repro.kernels.dispatch import vmem_ok
@@ -17,8 +18,10 @@ from repro.kernels.sa_inner import ref as _ref
 from repro.kernels.sa_inner.kernel import sa_inner_pallas
 
 
-def inner_impl(s: int, mu: int, use_pallas: bool) -> str:
-    return dispatch.choose_inner_impl("sa_inner", s, mu, use_pallas)
+def inner_impl(s: int, mu: int, use_pallas: bool,
+               itemsize: int = 4) -> str:
+    return dispatch.choose_inner_impl("sa_inner", s, mu, use_pallas,
+                                      itemsize)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -29,7 +32,8 @@ def sa_inner_loop(G, y_proj, z_proj, z_vals, idx, th_prev, coefU,
                   use_pallas: bool = False, interpret: bool = False):
     """Dispatch the s-step SA inner loop (see ref.py for semantics)."""
     s, mu = y_proj.shape
-    if inner_impl(s, mu, use_pallas or interpret) == "pallas":
+    if inner_impl(s, mu, use_pallas or interpret,
+                  jnp.dtype(G.dtype).itemsize) == "pallas":
         return sa_inner_pallas(
             G, y_proj, z_proj, z_vals, idx, th_prev, coefU,
             q=q, lam1=lam1, lam2=lam2, power_iters=power_iters,

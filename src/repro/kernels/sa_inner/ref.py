@@ -13,7 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.linalg import power_iteration_max_eig
+from repro.core.linalg import floor_eig, power_iteration_max_eig
 
 
 def sa_inner_ref(G, y_proj, z_proj, z_vals, idx, th_prev, coefU,
@@ -44,7 +44,7 @@ def sa_inner_ref(G, y_proj, z_proj, z_vals, idx, th_prev, coefU,
         rj = thp * thp * y_proj[j] + z_proj[j] \
             - jnp.einsum("t,t,tp->p", mask, coef_t, cross)
         v = power_iteration_max_eig(Gj[:, j, :], power_iters)
-        eta = 1.0 / (q * thp * v)
+        eta = 1.0 / floor_eig(q * thp * v)  # floored: zero block -> no-op
         # collision-corrected current z at this block's coordinates.
         eq = (idx[j][:, None] == idx_flat[None, :]).astype(G.dtype)
         w = (mask[:, None] * dz_buf).reshape(s * mu)

@@ -26,19 +26,23 @@ from repro.kernels.spmm import ref as _ref
 from repro.kernels.spmm.kernel import ell_spmm_pallas
 
 
-def spmm_impl(R: int, K: int, C: int, Q: int, use_pallas: bool) -> str:
-    return dispatch.choose_spmm_impl(R, K, C, Q, use_pallas)
+def spmm_impl(R: int, K: int, C: int, Q: int, use_pallas: bool,
+              itemsize: int = 4) -> str:
+    return dispatch.choose_spmm_impl(R, K, C, Q, use_pallas, itemsize)
 
 
-def grouped_spmm_label(H: int, s: int, shape_fn, use_pallas: bool) -> str:
+def grouped_spmm_label(H: int, s: int, shape_fn, use_pallas: bool,
+                       itemsize: int = 4) -> str:
     """The SpMM implementation(s) an SA grouped schedule actually runs:
     ``shape_fn(s_grp) -> (R, K, C, Q)`` maps a group size to the SpMM
     shape; the tail group (H mod s) can dispatch differently from the
     full groups, in which case the label is "main+tail"-joined — same
     convention as ``sa_loop.grouped_impl_label``."""
     full, rem = divmod(H, s)
-    labels = ([spmm_impl(*shape_fn(s), use_pallas)] if full else []) \
-        + ([spmm_impl(*shape_fn(rem), use_pallas)] if rem else [])
+    labels = ([spmm_impl(*shape_fn(s), use_pallas, itemsize)]
+              if full else []) \
+        + ([spmm_impl(*shape_fn(rem), use_pallas, itemsize)]
+           if rem else [])
     if len(set(labels)) == 1:
         return labels[0]
     return "+".join(labels)
@@ -66,7 +70,8 @@ def ell_spmm(vals, idx, blocks, D, ell_block: int = 8,
     """
     R, K = vals.shape
     C, Q = D.shape
-    if spmm_impl(R, K, C, Q, use_pallas or interpret) == "pallas":
+    if spmm_impl(R, K, C, Q, use_pallas or interpret,
+                 jnp.dtype(vals.dtype).itemsize) == "pallas":
         out = ell_spmm_pallas(vals, idx, blocks, _pad_lanes(D),
                               ell_block=ell_block, interpret=interpret)
         return out[:, :Q]

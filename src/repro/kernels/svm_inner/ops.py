@@ -10,6 +10,7 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import dispatch
 from repro.kernels.dispatch import vmem_ok
@@ -17,8 +18,10 @@ from repro.kernels.svm_inner import ref as _ref
 from repro.kernels.svm_inner.kernel import svm_inner_pallas
 
 
-def inner_impl(s: int, mu: int, use_pallas: bool) -> str:
-    return dispatch.choose_inner_impl("svm_inner", s, mu, use_pallas)
+def inner_impl(s: int, mu: int, use_pallas: bool,
+               itemsize: int = 4) -> str:
+    return dispatch.choose_inner_impl("svm_inner", s, mu, use_pallas,
+                                      itemsize)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -28,7 +31,8 @@ def svm_inner_loop(G, proj, b_sel, a_vals, idx, gamma: float, nu: float,
                    interpret: bool = False):
     """Dispatch the s-step SVM inner loop (see ref.py for semantics)."""
     s, mu = proj.shape
-    if inner_impl(s, mu, use_pallas or interpret) == "pallas":
+    if inner_impl(s, mu, use_pallas or interpret,
+                  jnp.dtype(G.dtype).itemsize) == "pallas":
         return svm_inner_pallas(G, proj, b_sel, a_vals, idx, gamma=gamma,
                                 nu=nu, power_iters=power_iters,
                                 interpret=interpret)

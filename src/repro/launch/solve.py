@@ -64,6 +64,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="skip the per-iteration objective trace")
     ap.add_argument("--power-iters", type=int, default=32,
                     help="power-method iterations for the block step size")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune s/mu/use_pallas/symmetric_gram with "
+                         "the calibrated cost model (repro.tune) before "
+                         "solving; --s/--mu become the incumbent the "
+                         "tuner must beat")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
@@ -84,6 +89,17 @@ def main(argv=None):
                        seed=args.seed)
     t0 = time.perf_counter()
     problem = family.make_problem(args)
+    if args.tune:
+        from repro import tune
+        tr = tune.tune(problem, cfg, family=family.name)
+        cfg = tr.config
+        print(f"tuned[{family.name}]: s={cfg.s} mu={cfg.block_size} "
+              f"use_pallas={cfg.use_pallas} "
+              f"symmetric_gram={cfg.symmetric_gram} "
+              f"(model {tr.predicted_s:.3g}s vs incumbent "
+              f"{tr.predicted_default_s:.3g}s"
+              f"{', cached machine' if tr.from_cache else ''})")
+        args.s, args.mu = cfg.s, cfg.block_size   # describe() reads these
     res = api.solve(problem, cfg, family=family.name)
     print(family.describe(args, res, time.perf_counter() - t0))
 

@@ -98,7 +98,7 @@ def test_inner_impl_contract(mod, name):
     assert mod.inner_impl(8, 4, True) == "pallas"
     big_s = 4096                            # (s*mu)^2 * 4 B >> 8 MB cap
     assert not mod.vmem_ok(big_s, 4)
-    dispatch._warned.discard((name, big_s, 4))
+    dispatch._warned.discard((name, big_s, 4, 4))
     with pytest.warns(UserWarning, match="falling back"):
         assert mod.inner_impl(big_s, 4, True) == "ref"
     # one-time: a second query must not warn again.
@@ -106,6 +106,25 @@ def test_inner_impl_contract(mod, name):
     with _w.catch_warnings():
         _w.simplefilter("error")
         assert mod.inner_impl(big_s, 4, True) == "ref"
+
+
+@pytest.mark.parametrize("mod,name", [(sa_inner, "sa_inner"),
+                                      (svm_inner, "svm_inner")])
+def test_inner_vmem_guard_is_dtype_aware(mod, name):
+    """A near-cap Gram block fits at 4 B/element but NOT at 8 B
+    (float64) — the guard must count the actual itemsize (regression:
+    it hardcoded 4 B, so f64 solves dispatched Pallas with 2x the
+    modeled VMEM)."""
+    from repro.kernels import dispatch
+
+    s, mu = 181, 8                          # (s*mu)^2 = 1448^2 ~ 2.1e6
+    assert mod.vmem_ok(s, mu)               # f32: just under the cap
+    assert mod.vmem_ok(s, mu, itemsize=4)
+    assert not mod.vmem_ok(s, mu, itemsize=8)
+    assert mod.inner_impl(s, mu, True, itemsize=4) == "pallas"
+    dispatch._warned.discard((name, s, mu, 8))
+    with pytest.warns(UserWarning, match="falling back"):
+        assert mod.inner_impl(s, mu, True, itemsize=8) == "ref"
 
 
 def test_grouped_impl_label_mixed():
@@ -173,13 +192,29 @@ def test_spmm_impl_contract():
     assert spmm.spmm_impl(8, 8, 64, 9, True) == "pallas"
     big = (4096, 64, 100_000, 256)          # resident D >> 8 MB cap
     assert not spmm.spmm_vmem_ok(*big)
-    dispatch._warned.discard(("spmm",) + big)
+    dispatch._warned.discard(("spmm",) + big + (4,))
     with pytest.warns(UserWarning, match="falling back"):
         assert spmm.spmm_impl(*big, True) == "ref"
     import warnings as _w
     with _w.catch_warnings():
         _w.simplefilter("error")
         assert spmm.spmm_impl(*big, True) == "ref"
+
+
+def test_spmm_vmem_guard_is_dtype_aware():
+    """Same dtype-awareness contract for the blocked-ELL SpMM guard: a
+    working set just under the cap at 4 B/element must be rejected at
+    8 B (the int32 index plane stays 4 B either way)."""
+    from repro.kernels import dispatch
+
+    near = (64, 8, 16_000, 1)               # ~8.23 MB at 4 B/element
+    assert spmm.spmm_vmem_ok(*near)
+    assert spmm.spmm_vmem_ok(*near, itemsize=4)
+    assert not spmm.spmm_vmem_ok(*near, itemsize=8)
+    assert spmm.spmm_impl(*near, True, itemsize=4) == "pallas"
+    dispatch._warned.discard(("spmm",) + near + (8,))
+    with pytest.warns(UserWarning, match="falling back"):
+        assert spmm.spmm_impl(*near, True, itemsize=8) == "ref"
 
 
 def test_grouped_spmm_label_mixed():
@@ -194,7 +229,7 @@ def test_grouped_spmm_label_mixed():
 
     with pytest.warns(UserWarning, match="falling back"):
         from repro.kernels import dispatch
-        dispatch._warned.discard(("spmm", 64, 64, 100_000, 256))
+        dispatch._warned.discard(("spmm", 64, 64, 100_000, 256, 4))
         assert spmm.grouped_spmm_label(65, 64, shape_mixed, True) \
             == "ref+pallas"
 

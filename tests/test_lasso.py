@@ -76,3 +76,164 @@ def test_iterations_need_not_divide_s():
         SolverConfig(iterations=0)
     with pytest.raises(ValueError):
         SolverConfig(s=0)
+
+
+# ---------------------------------------------------------------------------
+# Regression: all-zero sampled column blocks must not poison x with NaN.
+# ---------------------------------------------------------------------------
+
+def _zero_column_problem():
+    """A small dense problem with a planted all-zero column. The
+    synthetic generators guard empty columns, but user-supplied data
+    has no such guarantee — one unlucky draw of the zero column used to
+    give power_iteration_max_eig(G) == 0, eta = 1/0 = inf, and
+    inf * 0 = NaN forever after."""
+    rng = np.random.default_rng(11)
+    m, n = 64, 6
+    A = rng.standard_normal((m, n)).astype(np.float32)
+    A[:, 4] = 0.0
+    x_true = np.zeros(n, np.float32)
+    x_true[:2] = [1.5, -2.0]
+    b = (A @ x_true + 0.05 * rng.standard_normal(m)).astype(np.float32)
+    lam = 0.05 * float(np.abs(A.T @ b).max())
+    return A, b, lam
+
+
+def _assert_zero_block_draw_hits(n, mu, H, seed=0):
+    """The regression is only exercised if the shared index stream
+    actually samples the planted zero column — verify it does."""
+    import jax
+    from repro.core.linalg import sample_block
+
+    key = jax.random.key(seed)
+    draws = np.asarray(jax.vmap(
+        lambda h: sample_block(jax.random.fold_in(key, h), n, mu))(
+        np.arange(1, H + 1)))
+    assert (draws == 4).any(), "seed never samples the zero column"
+
+
+@pytest.mark.parametrize("accelerated", [False, True])
+@pytest.mark.parametrize("s", [1, 4])
+def test_zero_column_block_stays_finite(accelerated, s):
+    """Regression (NaN step size on zero Gram blocks): a sampled
+    all-zero column block must be a no-op, not a NaN factory — across
+    classical and SA, accelerated and not."""
+    from repro.core import sa_acc_bcd_lasso, sa_bcd_lasso
+
+    A, b, lam = _zero_column_problem()
+    prob = LassoProblem(A=A, b=b, lam=lam)
+    H, mu = 48, 1
+    _assert_zero_block_draw_hits(A.shape[1], mu, H)
+    cfg = SolverConfig(block_size=mu, iterations=H, s=s,
+                       accelerated=accelerated)
+    if s == 1:
+        res = (acc_bcd_lasso if accelerated else bcd_lasso)(prob, cfg)
+    else:
+        res = (sa_acc_bcd_lasso if accelerated else sa_bcd_lasso)(prob,
+                                                                  cfg)
+    x = np.asarray(res.x)
+    obj = np.asarray(res.objective)
+    assert np.isfinite(x).all(), x
+    assert np.isfinite(obj).all(), obj
+    assert x[4] == 0.0                      # the zero column stays put
+    assert obj[-1] < obj[0]                 # and the solve still works
+
+
+def test_zero_block_sa_inner_kernel_parity():
+    """The Pallas sa_inner kernel applies the same eigenvalue floor as
+    the jnp reference: a fully-zero Gram block yields finite, matching
+    (and zero) updates on both paths."""
+    import jax
+    from repro.kernels.sa_inner.ops import sa_inner_loop
+    from repro.kernels.sa_inner.ref import sa_inner_ref
+
+    s, mu = 4, 2
+    key = jax.random.key(5)
+    G0 = jax.random.normal(key, (32, s * mu))
+    G = (G0.T @ G0).at[2 * mu:3 * mu, :].set(0.0).at[:, 2 * mu:3 * mu] \
+        .set(0.0)                           # block j=2 is all-zero
+    yp = jax.random.normal(jax.random.fold_in(key, 1), (s, mu))
+    yp = yp.at[2].set(0.0)                  # its projections are 0 too
+    zp = jax.random.normal(jax.random.fold_in(key, 2), (s, mu))
+    zp = zp.at[2].set(0.0)
+    zv = jnp.zeros((s, mu))
+    idx = jnp.arange(s * mu).reshape(s, mu)
+    th = jnp.linspace(0.5, 0.1, s)
+    coefU = (1.0 - 8 * th) / (th * th)
+    dz_ref, e_ref = sa_inner_ref(G, yp, zp, zv, idx, th, coefU, 8.0, 0.3)
+    dz_pal, e_pal = sa_inner_loop(G, yp, zp, zv, idx, th, coefU, q=8.0,
+                                  lam1=0.3, interpret=True)
+    assert np.isfinite(np.asarray(dz_ref)).all()
+    assert np.isfinite(np.asarray(dz_pal)).all()
+    np.testing.assert_array_equal(np.asarray(dz_ref[2]), 0.0)
+    np.testing.assert_array_equal(np.asarray(dz_pal[2]), 0.0)
+    np.testing.assert_allclose(np.asarray(dz_pal), np.asarray(dz_ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Regression: group lasso must reject configurations it would silently
+# mis-solve (DESIGN.md contract: contiguous, equal-sized mu-blocks).
+# ---------------------------------------------------------------------------
+
+def _group_problem(n, mu, rng_seed=3):
+    rng = np.random.default_rng(rng_seed)
+    m = 48
+    A = rng.standard_normal((m, n)).astype(np.float32)
+    b = rng.standard_normal(m).astype(np.float32)
+    groups = np.repeat(np.arange(n // mu), mu)
+    return A, b, groups
+
+
+def test_group_lasso_rejects_indivisible_n():
+    """Regression: with mu not dividing n, n_groups = n // mu silently
+    dropped the trailing n % mu coordinates from the sampler — they
+    were never updated. Now a hard ValueError."""
+    A, b, _ = _group_problem(12, 4)
+    groups = np.repeat(np.arange(3), 4)     # valid ids, but n=12, mu=5
+    prob = LassoProblem(A=A, b=b, lam=0.1, groups=groups)
+    with pytest.raises(ValueError, match="trailing"):
+        bcd_lasso(prob, SolverConfig(block_size=5, iterations=4))
+
+
+def test_group_lasso_rejects_non_contiguous_groups():
+    """Regression: nothing validated that the groups array actually is
+    contiguous mu-sized blocks; a permuted labeling solved a DIFFERENT
+    problem (the block prox shrank coordinate sets that were not the
+    declared groups) without any error."""
+    A, b, groups = _group_problem(12, 4)
+    rng = np.random.default_rng(0)
+    shuffled = rng.permutation(groups)
+    assert not np.array_equal(shuffled, groups)
+    prob = LassoProblem(A=A, b=b, lam=0.1, groups=shuffled)
+    with pytest.raises(ValueError, match="contiguous"):
+        bcd_lasso(prob, SolverConfig(block_size=4, iterations=4))
+    # wrong group size relative to block_size is the same violation
+    prob2 = LassoProblem(A=A, b=b, lam=0.1,
+                         groups=np.repeat(np.arange(6), 2))
+    with pytest.raises(ValueError, match="contiguous"):
+        bcd_lasso(prob2, SolverConfig(block_size=4, iterations=4))
+
+
+def test_group_lasso_valid_groups_still_solve():
+    """The contract check must not reject the documented valid form."""
+    A, b, groups = _group_problem(12, 4)
+    prob = LassoProblem(A=A, b=b, lam=0.1, groups=groups)
+    res = bcd_lasso(prob, SolverConfig(block_size=4, iterations=16))
+    assert np.isfinite(np.asarray(res.objective)).all()
+
+
+def test_group_lasso_accepts_relabeled_contiguous_groups():
+    """The contract is contiguous mu-sized blocks with distinct ids —
+    NOT ascending ids: [1,1,0,0]-style labelings solved correctly
+    before validation existed and must keep working."""
+    A, b, _ = _group_problem(12, 4)
+    relabeled = np.array([5, 5, 5, 5, 0, 0, 0, 0, 2, 2, 2, 2])
+    prob = LassoProblem(A=A, b=b, lam=0.1, groups=relabeled)
+    res = bcd_lasso(prob, SolverConfig(block_size=4, iterations=8))
+    assert np.isfinite(np.asarray(res.objective)).all()
+    # but an id spanning two blocks is still a violation
+    spanning = np.array([0, 0, 0, 0, 1, 1, 1, 1, 0, 0, 0, 0])
+    with pytest.raises(ValueError, match="contiguous"):
+        bcd_lasso(LassoProblem(A=A, b=b, lam=0.1, groups=spanning),
+                  SolverConfig(block_size=4, iterations=8))

@@ -269,3 +269,108 @@ assert rel < 1e-12, rel
     assert out.returncode == 0, out.stderr[-2000:]
     rel = float(out.stdout.split("REL")[1].strip())
     assert rel < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Elastic-net and group-lasso SA equivalence: prox.py supports l2/groups
+# and both flow through _prep into all four lasso variants, but until
+# this tier only unit prox tests exercised them.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("accelerated", [False, True])
+@pytest.mark.parametrize("s", [4, 6])       # 6 does not divide H = 32
+def test_elastic_net_sa_trajectory_matches(lasso_data, accelerated, s):
+    """SA == classical for the elastic-net prox (l2 > 0), including a
+    remainder tail group (H % s != 0)."""
+    A, b, lam = lasso_data
+    prob = LassoProblem(A=A, b=b, lam=lam, l2=0.5 * lam)
+    H = 32
+    cfg = SolverConfig(block_size=4, iterations=H, accelerated=accelerated)
+    cfg_sa = SolverConfig(block_size=4, iterations=H, s=s,
+                          accelerated=accelerated)
+    base = (acc_bcd_lasso if accelerated else bcd_lasso)(prob, cfg)
+    sa = (sa_acc_bcd_lasso if accelerated else sa_bcd_lasso)(prob, cfg_sa)
+    o1, o2 = np.asarray(base.objective), np.asarray(sa.objective)
+    assert o1.shape == o2.shape == (H,)
+    np.testing.assert_allclose(o2, o1, rtol=5e-5)
+    np.testing.assert_allclose(np.asarray(sa.x), np.asarray(base.x),
+                               atol=2e-5)
+    assert o1[-1] < o1[0]
+
+
+@pytest.mark.parametrize("accelerated", [False, True])
+@pytest.mark.parametrize("s", [4, 6])       # 6 does not divide H = 32
+def test_group_lasso_sa_trajectory_matches(lasso_data, accelerated, s):
+    """SA == classical for group lasso (whole-group sampling + block
+    soft-threshold), including a remainder tail group."""
+    A, b, lam = lasso_data
+    n, mu = A.shape[1], 4
+    groups = np.repeat(np.arange(n // mu), mu)
+    prob = LassoProblem(A=A, b=b, lam=lam, groups=groups)
+    H = 32
+    cfg = SolverConfig(block_size=mu, iterations=H, accelerated=accelerated)
+    cfg_sa = SolverConfig(block_size=mu, iterations=H, s=s,
+                          accelerated=accelerated)
+    base = (acc_bcd_lasso if accelerated else bcd_lasso)(prob, cfg)
+    sa = (sa_acc_bcd_lasso if accelerated else sa_bcd_lasso)(prob, cfg_sa)
+    o1, o2 = np.asarray(base.objective), np.asarray(sa.objective)
+    assert o1.shape == o2.shape == (H,)
+    np.testing.assert_allclose(o2, o1, rtol=5e-5)
+    np.testing.assert_allclose(np.asarray(sa.x), np.asarray(base.x),
+                               atol=2e-5)
+    assert o1[-1] < o1[0]
+
+
+@pytest.mark.slow
+def test_elastic_net_and_group_lasso_sa_f64():
+    """The f64 <= 1e-10 tier for the two non-plain regularizers: the SA
+    transformation only rearranges arithmetic, so elastic-net and
+    group-lasso trajectories match the classical solvers at machine
+    epsilon across an s x mu sweep including remainder groups
+    (H % s != 0) — same acceptance bound as the Table III tiers."""
+    code = r"""
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from repro.core import (LassoProblem, SolverConfig, acc_bcd_lasso,
+                        bcd_lasso, sa_acc_bcd_lasso, sa_bcd_lasso)
+rng = np.random.default_rng(12)
+m, n = 96, 48
+A = rng.standard_normal((m, n))
+xt = np.zeros(n); xt[:6] = rng.standard_normal(6)
+b = A @ xt + 0.1 * rng.standard_normal(m)
+lam = 0.1 * float(np.abs(A.T @ b).max())
+H = 36
+worst = 0.0
+for reg in ("l2", "groups"):
+    for mu in (2, 4):
+        for s in (4, 8, 10):                # 8, 10 do not divide H = 36
+            kw = {"l2": 0.5 * lam} if reg == "l2" else \
+                 {"groups": np.repeat(np.arange(n // mu), mu)}
+            prob = LassoProblem(A=A, b=b, lam=lam, **kw)
+            for acc in (False, True):
+                cfg = SolverConfig(block_size=mu, iterations=H,
+                                   accelerated=acc, dtype=jnp.float64)
+                cfg_sa = SolverConfig(block_size=mu, iterations=H, s=s,
+                                      accelerated=acc, dtype=jnp.float64)
+                base = (acc_bcd_lasso if acc else bcd_lasso)(prob, cfg)
+                sa = (sa_acc_bcd_lasso if acc else sa_bcd_lasso)(prob,
+                                                                 cfg_sa)
+                o1 = np.asarray(base.objective)
+                o2 = np.asarray(sa.objective)
+                dev = float(np.max(np.abs(o1 - o2)
+                                   / np.maximum(np.abs(o1), 1e-30)))
+                xdev = float(np.max(np.abs(np.asarray(base.x)
+                                           - np.asarray(sa.x))))
+                worst = max(worst, dev, xdev)
+print("DEV", worst)
+assert worst < 1e-10, worst
+"""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    dev = float(out.stdout.split("DEV")[1].strip())
+    assert dev < 1e-10

@@ -1,0 +1,542 @@
+"""The autotuner (repro.tune): the linear-model fit, guard-aware
+selection, the cache, and the solve(tune=...) integration."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro import tune
+from repro.api import LassoProblem, SolverConfig, resolve_family
+from repro.core import cost_model
+from repro.core.cost_model import Machine, ProblemDims
+
+
+# ---------------------------------------------------------------------------
+# cost_model: the calibration-friendly per-term vectors.
+# ---------------------------------------------------------------------------
+
+def test_cost_vector_matches_predicted_time():
+    """predicted_time IS the dot product of machine_vector and
+    cost_vector — the linearity calibration relies on."""
+    dims = ProblemDims(m=4096, n=8192, f=0.01)
+    mach = Machine.cray_xc30()
+    for s, mu in [(1, 1), (8, 4), (64, 8)]:
+        costs = cost_model.lasso_costs(dims, 512, mu, s, 64)
+        direct = cost_model.predicted_time(costs, mach)
+        dot = sum(p * c for p, c in zip(cost_model.machine_vector(mach),
+                                        cost_model.cost_vector(costs)))
+        assert direct == pytest.approx(dot)
+        breakdown = cost_model.time_breakdown(costs, mach)
+        assert sum(breakdown.values()) == pytest.approx(direct)
+        assert set(breakdown) == set(cost_model.COST_TERMS)
+
+
+def test_machine_vector_roundtrip():
+    mach = Machine.tpu_v5e_pod()
+    vec = cost_model.machine_vector(mach)
+    back = cost_model.machine_from_vector(vec, name=mach.name)
+    assert back == mach
+
+
+# ---------------------------------------------------------------------------
+# calibrate: NNLS and the fit.
+# ---------------------------------------------------------------------------
+
+def test_nnls_recovers_nonnegative_solution():
+    rng = np.random.default_rng(0)
+    C = rng.random((12, 4)) + 0.1
+    theta_true = np.array([2.0, 0.0, 1.5, 0.3])
+    t = C @ theta_true
+    theta = tune.nnls(C, t)
+    np.testing.assert_allclose(theta, theta_true, atol=1e-8)
+    assert (theta >= 0).all()
+
+
+def test_nnls_clips_negative_coordinates():
+    """A system whose unconstrained solution is negative in one
+    coordinate must come back clipped, not negative."""
+    C = np.array([[1.0, 1.0], [1.0, 1.01], [1.0, 0.99]])
+    t = np.array([1.0, 0.98, 1.02])      # wants theta[1] < 0
+    theta = tune.nnls(C, t)
+    assert (theta >= 0).all()
+
+
+def test_fit_machine_recovers_known_machine():
+    """Synthetic measurements generated FROM a machine fit back to that
+    machine (exact linear recovery — 4 unknowns, 6 equations)."""
+    dims = ProblemDims(m=2048, n=8192, f=1.0)
+    true = Machine("true", alpha=2e-4, beta=3e-9, gamma=5e-10,
+                   kappa=1e-4)
+    rows = [cost_model.lasso_costs(dims, 48, mu, s, 1)
+            for s, mu in [(1, 1), (1, 8), (4, 4), (8, 1), (16, 8),
+                          (32, 2)]]
+    times = [cost_model.predicted_time(r, true) for r in rows]
+    fitted = tune.fit_machine(rows, times)
+    for a, b in zip(cost_model.machine_vector(fitted),
+                    cost_model.machine_vector(true)):
+        assert a == pytest.approx(b, rel=1e-6)
+
+
+def _toy_problem(m=64, n=96, seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((m, n)).astype(np.float32)
+    b = rng.standard_normal(m).astype(np.float32)
+    return LassoProblem(A=A, b=b, lam=0.1)
+
+
+def test_calibrate_with_injected_measurements_reports_fit():
+    """calibrate() with a fake measure_fn that IS the model: perfect
+    recovery, ratio ~1 at every pilot point, no real solves."""
+    prob = _toy_problem()
+    fam = resolve_family(prob)
+    true = Machine("true", alpha=1e-4, beta=2e-9, gamma=8e-10,
+                   kappa=5e-5)
+    dims = tune.problem_dims(prob)
+
+    def fake_measure(cfg):
+        costs = fam.costs(dims, cfg.iterations, cfg.block_size, cfg.s, 1)
+        return cost_model.predicted_time(costs, true)
+
+    rep = tune.calibrate(prob, SolverConfig(), measure_fn=fake_measure,
+                         pilot_iters=32)
+    assert rep.max_ratio == pytest.approx(1.0, abs=1e-6)
+    assert len(rep.points) >= 4
+    d = rep.to_dict()
+    assert d["machine"]["gamma"] == pytest.approx(8e-10, rel=1e-5)
+
+
+def test_problem_dims_executed_density():
+    """f is the EXECUTED density: 1.0 for dense arrays (stored zeros
+    still cost dense flops), stored density for SparseOperands."""
+    from repro.core.types import SparseOperand
+
+    rng = np.random.default_rng(1)
+    A = rng.standard_normal((32, 48)).astype(np.float32)
+    A[rng.random(A.shape) < 0.9] = 0.0
+    dense_dims = tune.problem_dims(LassoProblem(A=A, b=A[:, 0], lam=0.1))
+    assert dense_dims.f == 1.0
+    op = SparseOperand.from_dense(A)
+    sp_dims = tune.problem_dims(LassoProblem(A=op, b=A[:, 0], lam=0.1))
+    assert sp_dims.f == pytest.approx(op.nnz / (32 * 48))
+    assert sp_dims.f < 0.2
+
+
+# ---------------------------------------------------------------------------
+# select: guard-aware, structure-aware.
+# ---------------------------------------------------------------------------
+
+def _latency_machine():
+    """Latency-dominated machine: pushes the selection to large s."""
+    return Machine("lat", alpha=1e-2, beta=1e-12, gamma=1e-13,
+                   kappa=1e-9)
+
+
+def test_select_prefers_large_s_on_latency_bound_machine():
+    prob = _toy_problem()
+    cfg = tune.select_config(prob, _latency_machine(),
+                             SolverConfig(iterations=128))
+    assert cfg.s > 8
+    assert cfg.iterations == 128            # preserved, not tuned
+
+
+def test_select_never_recommends_guard_violating_pallas():
+    """With Pallas allowed and a latency-bound machine pushing s high,
+    any recommended use_pallas=True must satisfy the VMEM guard at the
+    solve dtype — a recommendation that silently falls back to ref
+    would invalidate the tuner's own model."""
+    import jax.numpy as jnp
+    from repro.kernels import dispatch
+
+    prob = _toy_problem()
+    fam = resolve_family(prob)
+    base = SolverConfig(iterations=64, dtype=jnp.float64)
+    # grid containing an over-VMEM (s, mu) at f64 that fits at f32
+    grid = [(1, 1), (181, 8), (2048, 8)]
+    cfg = tune.select_config(prob, _latency_machine(), base, fam,
+                             allow_pallas=True, grid=grid)
+    if cfg.use_pallas:
+        assert dispatch.vmem_ok(cfg.s, cfg.block_size,
+                                jnp.dtype(cfg.dtype).itemsize)
+    # and directly: the guard helper is dtype-aware
+    assert tune.pallas_guards_ok(prob, fam, 181, 8, jnp.float32)
+    assert not tune.pallas_guards_ok(prob, fam, 181, 8, jnp.float64)
+    assert not tune.pallas_guards_ok(prob, fam, 2048, 8, jnp.float32)
+
+
+def test_select_keeps_group_block_size():
+    """Group lasso: mu is the declared group size — structural, not
+    tunable. The sweep may change s but must keep block_size."""
+    n, mu = 96, 4
+    prob = _toy_problem(n=n)
+    prob = dataclasses.replace(prob,
+                               groups=np.repeat(np.arange(n // mu), mu))
+    cfg = tune.select_config(prob, _latency_machine(),
+                             SolverConfig(block_size=mu, iterations=64))
+    assert cfg.block_size == mu
+
+
+def test_candidate_grid_respects_family_tune_space():
+    prob = _toy_problem()
+    fam = resolve_family(prob)
+    grid = tune.candidate_grid(fam, prob, SolverConfig())
+    ss = {s for s, _ in grid}
+    mus = {mu for _, mu in grid}
+    assert ss == set(fam.tune_space["s"])
+    assert mus <= set(fam.tune_space["mu"])
+    assert all(mu <= prob.A.shape[1] for _, mu in grid)
+
+
+# ---------------------------------------------------------------------------
+# tune / autotune: end to end with injected measurements + the cache.
+# ---------------------------------------------------------------------------
+
+def _flop_true_machine():
+    return Machine("true", alpha=5e-4, beta=1e-9, gamma=5e-10,
+                   kappa=2e-5)
+
+
+def _fake_measure(prob, fam):
+    dims = tune.problem_dims(prob)
+    true = _flop_true_machine()
+
+    def measure(cfg):
+        costs = fam.costs(dims, cfg.iterations, cfg.block_size, cfg.s, 1)
+        return cost_model.predicted_time(costs, true)
+
+    return measure
+
+
+def test_tune_end_to_end_with_injected_measurements(tmp_path):
+    prob = _toy_problem()
+    fam = resolve_family(prob)
+    base = SolverConfig(block_size=8, s=1, iterations=256,
+                        track_objective=False)
+    res = tune.tune(prob, base, cache_dir=str(tmp_path),
+                    measure_fn=_fake_measure(prob, fam))
+    cfg = res.config
+    assert isinstance(cfg, SolverConfig)
+    assert cfg.iterations == 256            # owned by the caller
+    assert cfg.track_objective is False
+    assert res.predicted_s <= res.predicted_default_s
+    # alpha dominates the injected machine -> SA (s > 1) must win
+    assert cfg.s > 1
+    # the calibrated machine recovered the injected parameters
+    assert res.machine.alpha == pytest.approx(5e-4, rel=1e-4)
+
+
+def test_tune_cache_roundtrip(tmp_path):
+    """Second tune of the same regime loads the calibrated machine from
+    results/tuned/ instead of re-measuring."""
+    prob = _toy_problem()
+    fam = resolve_family(prob)
+    calls = []
+    measure = _fake_measure(prob, fam)
+
+    def counting_measure(cfg):
+        calls.append(cfg)
+        return measure(cfg)
+
+    first = tune.tune(prob, SolverConfig(iterations=64),
+                      cache_dir=str(tmp_path),
+                      measure_fn=counting_measure)
+    assert not first.from_cache and calls
+    n_calls = len(calls)
+    path = tune.cache_path(prob, fam.name, str(tmp_path))
+    assert os.path.exists(path)
+    second = tune.tune(prob, SolverConfig(iterations=64),
+                       cache_dir=str(tmp_path),
+                       measure_fn=counting_measure)
+    assert second.from_cache
+    assert len(calls) == n_calls            # no new measurements
+    assert second.machine == first.machine
+    # refresh=True forces a re-measure
+    third = tune.tune(prob, SolverConfig(iterations=64),
+                      cache_dir=str(tmp_path), refresh=True,
+                      measure_fn=counting_measure)
+    assert not third.from_cache and len(calls) > n_calls
+
+
+def test_load_cached_machine_tolerates_garbage(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text("{not json")
+    assert tune.load_cached_machine(str(p)) is None
+    assert tune.load_cached_machine(str(tmp_path / "missing.json")) \
+        is None
+
+
+def test_autotune_returns_config(tmp_path):
+    prob = _toy_problem()
+    fam = resolve_family(prob)
+    cfg = tune.autotune(prob, SolverConfig(iterations=32),
+                        cache_dir=str(tmp_path),
+                        measure_fn=_fake_measure(prob, fam))
+    assert isinstance(cfg, SolverConfig)
+
+
+def test_solve_tune_auto_integration(tmp_path, monkeypatch):
+    """api.solve(problem, cfg, tune='auto') tunes then solves; the
+    config actually used is surfaced in aux. Real (tiny) measurements —
+    the whole loop, no injection."""
+    from repro import api
+
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path))
+    prob = _toy_problem()
+    base = SolverConfig(block_size=4, s=2, iterations=12,
+                        track_objective=False)
+    res = api.solve(prob, base, tune="auto")
+    used = res.aux["tuned_config"]
+    assert isinstance(used, SolverConfig)
+    assert used.iterations == 12
+    assert res.x.shape == (prob.A.shape[1],)
+    assert np.isfinite(np.asarray(res.x)).all()
+    # and the calibrated machine landed in the cache
+    fam = resolve_family(prob)
+    assert os.path.exists(tune.cache_path(prob, fam.name,
+                                          str(tmp_path)))
+
+
+def test_solve_rejects_unknown_tune_mode():
+    from repro import api
+
+    with pytest.raises(ValueError, match="tune mode"):
+        api.solve(_toy_problem(), SolverConfig(iterations=4),
+                  tune="bogus")
+
+
+# ---------------------------------------------------------------------------
+# Review-found defects (regressions).
+# ---------------------------------------------------------------------------
+
+def test_cost_vector_requires_flw_keys():
+    """A malformed costs hook must fail loudly — zero-filling F/W/L
+    would make the tuner 'prefer' the broken family's configs."""
+    good = {"F": 1.0, "W": 2.0, "L": 3.0}
+    assert cost_model.cost_vector(good) == (1.0, 2.0, 3.0, 0.0)  # I optional
+    with pytest.raises(KeyError):
+        cost_model.cost_vector({"W": 2.0, "L": 3.0})
+
+
+def test_single_group_lasso_calibration_does_not_clamp_mu(tmp_path):
+    """Regression: the pilot grid clamped mu to n//2 AFTER forcing the
+    structural group size, so a single-group problem (group size ==
+    n > n//2) handed the solver a block_size violating the validated
+    groups contract and crashed mid-calibration."""
+    n, mu = 8, 8                            # ONE group spanning all of n
+    prob = _toy_problem(n=n)
+    prob = dataclasses.replace(prob, groups=np.zeros(n, np.int64))
+    fam = resolve_family(prob)
+    base = SolverConfig(block_size=mu, iterations=16,
+                        track_objective=False)
+    res = tune.tune(prob, base, cache_dir=str(tmp_path),
+                    measure_fn=_fake_measure(prob, fam))
+    assert res.config.block_size == mu
+
+
+def _tall_sparse_operand(m=17_000, n=32, nnz=2_000, seed=0):
+    from repro.core.types import SparseOperand
+
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, m, nnz)
+    cols = rng.integers(0, n, nnz)
+    # dedupe (from_coo requires duplicate-free triplets)
+    keys = np.unique(rows.astype(np.int64) * n + cols)
+    vals = rng.standard_normal(keys.size).astype(np.float32)
+    return SparseOperand.from_coo(keys // n, keys % n, vals, (m, n))
+
+
+def test_pallas_guard_only_checks_dispatched_spmm_shapes():
+    """Regression: the guard rejected sparse linear-SVM configs because
+    of the (m, s*mu) cross-block SpMM — a product only the kernelized
+    SVM and logreg families dispatch. At m ~ 17k the cross block alone
+    busts the VMEM cap, but the linear SVM's row-Gram fits fine."""
+    import jax.numpy as jnp
+    from repro.api import LogRegProblem, SVMProblem
+
+    op = _tall_sparse_operand()
+    b = np.sign(np.random.default_rng(1)
+                .standard_normal(op.shape[0])).astype(np.float32)
+    b[b == 0] = 1.0
+    svm = SVMProblem(A=op, b=b, lam=1.0)            # kernel="linear"
+    lr = LogRegProblem(A=op, b=b, lam=1e-3)
+    svm_fam = resolve_family(svm)
+    lr_fam = resolve_family(lr)
+    assert tune.pallas_guards_ok(svm, svm_fam, 4, 2, jnp.float32)
+    assert not tune.pallas_guards_ok(lr, lr_fam, 4, 2, jnp.float32)
+
+
+def test_cache_key_includes_dtype(tmp_path):
+    """An f32-calibrated machine must not be reused for f64 solves of
+    the same regime (gamma/beta are ~2x off for f64 residents)."""
+    import jax.numpy as jnp
+
+    prob = _toy_problem()
+    p32 = tune.cache_path(prob, "lasso", str(tmp_path),
+                          dtype=jnp.float32)
+    p64 = tune.cache_path(prob, "lasso", str(tmp_path),
+                          dtype=jnp.float64)
+    assert p32 != p64
+
+
+def test_tune_with_explicit_machine_skips_measurement(tmp_path):
+    """machine=<Machine> is pure model evaluation: no calibration, no
+    cache file, no solves."""
+    prob = _toy_problem()
+    res = tune.tune(prob, SolverConfig(iterations=64),
+                    machine=_latency_machine(), cache_dir=str(tmp_path),
+                    guard_incumbent=False)
+    assert res.calibration is None
+    assert res.machine == _latency_machine()
+    assert not os.listdir(tmp_path)
+
+
+def test_measure_machine_returns_positive_params():
+    """The microbench priors path (tune(machine='micro')): every
+    parameter measured on this host is finite and positive."""
+    mach = tune.measure_machine(repeats=2)
+    vec = cost_model.machine_vector(mach)
+    assert all(np.isfinite(v) and v > 0 for v in vec)
+
+
+def test_symmetric_gram_selection_pays_packing_cost():
+    """Regression: sym=True used to be strictly cheaper whenever
+    beta > 0 (the 0.5*beta*W saving with no modeled cost), making the
+    sweep decorative. The pack/unpack term must keep it OFF on a
+    flop-bound (single-host-like) machine and ON on a bandwidth-bound
+    one."""
+    prob = _toy_problem()
+    fam = resolve_family(prob)
+    dims = tune.problem_dims(prob)
+    base = SolverConfig(block_size=4, s=8, iterations=64)
+    sym = dataclasses.replace(base, symmetric_gram=True)
+    flop_bound = Machine("host", alpha=1e-6, beta=1e-12, gamma=1e-9,
+                         kappa=1e-6)
+    assert tune.predicted_solve_time(fam, dims, sym, flop_bound) \
+        > tune.predicted_solve_time(fam, dims, base, flop_bound)
+    bw_bound = Machine("net", alpha=1e-6, beta=1e-6, gamma=1e-12,
+                       kappa=1e-9)
+    assert tune.predicted_solve_time(fam, dims, sym, bw_bound) \
+        < tune.predicted_solve_time(fam, dims, base, bw_bound)
+    cfg = tune.select_config(prob, flop_bound,
+                             SolverConfig(iterations=64))
+    assert not cfg.symmetric_gram
+
+
+def test_solve_tune_auto_rejects_sharded_backend():
+    """Regression: tune='auto' calibrates with local P=1 pilot solves —
+    silently applying it to backend='sharded' would tune for the wrong
+    machine/topology, so the combination must be a loud error."""
+    from jax.sharding import Mesh
+    import jax
+
+    from repro import api
+
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    with pytest.raises(ValueError, match="backend='local'"):
+        api.solve(_toy_problem(), SolverConfig(iterations=4),
+                  backend="sharded", mesh=mesh, tune="auto")
+
+
+def test_select_rejects_inexecutable_explicit_grid():
+    """An explicit grid is filtered to executable candidates (mu within
+    the sampled axis) and an empty result is a loud error, not a None
+    the caller dereferences."""
+    prob = _toy_problem(n=96)
+    cfg = tune.select_config(prob, _latency_machine(),
+                             SolverConfig(iterations=32),
+                             grid=[(4, 256), (8, 4)])
+    assert cfg.block_size == 4              # the oversized mu dropped
+    with pytest.raises(ValueError, match="no executable"):
+        tune.select_config(prob, _latency_machine(),
+                           SolverConfig(iterations=32), grid=[(4, 256)])
+
+
+def test_explicit_grid_keeps_group_block_size():
+    """Regression: an explicit grid used to bypass the structural-mu
+    pin, proposing a block_size that violates the validated groups
+    contract mid-tune."""
+    n, mu = 96, 4
+    prob = _toy_problem(n=n)
+    prob = dataclasses.replace(prob,
+                               groups=np.repeat(np.arange(n // mu), mu))
+    cfg = tune.select_config(prob, _latency_machine(),
+                             SolverConfig(block_size=mu, iterations=32),
+                             grid=[(4, 2), (8, 2)])
+    assert cfg.block_size == mu
+
+
+def test_tune_calibrates_at_p1_even_when_selecting_for_p(tmp_path):
+    """Regression: tune(P=8) used to fit P-scaled cost rows against
+    pilot measurements that always run unsharded at P=1, corrupting
+    the fitted machine. Calibration must fit at P=1; P only changes
+    selection."""
+    prob = _toy_problem()
+    fam = resolve_family(prob)
+    true = _flop_true_machine()
+    dims = tune.problem_dims(prob)
+
+    def measure_p1(cfg):
+        # the pilot solve runs locally: its time follows the P=1 rows
+        costs = fam.costs(dims, cfg.iterations, cfg.block_size, cfg.s, 1)
+        return cost_model.predicted_time(costs, true)
+
+    res = tune.tune(prob, SolverConfig(iterations=64), P=8,
+                    cache_dir=str(tmp_path), measure_fn=measure_p1)
+    assert res.machine.alpha == pytest.approx(true.alpha, rel=1e-4)
+    assert res.machine.gamma == pytest.approx(true.gamma, rel=1e-4)
+
+
+def test_cached_tune_runs_no_solves(tmp_path):
+    """Regression: the incumbent guard used to run two full measured
+    solves on EVERY tune() call, so repeat solve(tune='auto') of a
+    cached regime still paid measurements — contradicting the cache's
+    whole point. With the default guard mode, a cache hit is pure
+    model evaluation."""
+    prob = _toy_problem()
+    fam = resolve_family(prob)
+    tune.tune(prob, SolverConfig(iterations=64),
+              cache_dir=str(tmp_path),
+              measure_fn=_fake_measure(prob, fam))
+    # second call: cache hit, no measure_fn available to fall back on —
+    # any attempted real measurement would run actual (slow) solves;
+    # instead we assert no guard measurement happened at all.
+    second = tune.tune(prob, SolverConfig(iterations=64),
+                       cache_dir=str(tmp_path))
+    assert second.from_cache
+    assert second.guard_times is None
+
+
+def test_guard_honors_injected_measurements(tmp_path):
+    """Regression: guard_incumbent=True with a measure_fn used to be
+    silently skipped. The head-to-head must run through the injected
+    measurements — and keep the incumbent when the injected timings
+    contradict the model's selection."""
+    prob = _toy_problem()
+    fam = resolve_family(prob)
+    model_measure = _fake_measure(prob, fam)
+    base = SolverConfig(block_size=8, s=1, iterations=128,
+                        track_objective=False)
+
+    def contrarian(cfg):
+        # pilot points follow the model (so calibration fits), but the
+        # incumbent (s=1, mu=8) is measured as impossibly fast.
+        if (cfg.s, cfg.block_size) == (base.s, base.block_size):
+            return 1e-9
+        return model_measure(cfg)
+
+    res = tune.tune(prob, base, cache_dir=str(tmp_path),
+                    guard_incumbent=True, measure_fn=contrarian)
+    assert res.guard_times is not None
+    assert res.config.s == base.s           # guard kept the incumbent
+    assert res.config.block_size == base.block_size
+
+
+def test_select_raises_on_empty_default_grid():
+    """Regression: an empty DEFAULT candidate grid (group block size
+    beyond the sampled axis) returned None instead of raising."""
+    n = 8
+    prob = _toy_problem(n=n)
+    prob = dataclasses.replace(prob, groups=np.zeros(n, np.int64))
+    with pytest.raises(ValueError, match="no executable"):
+        tune.select_config(prob, _latency_machine(),
+                           SolverConfig(block_size=16, iterations=8))
