@@ -19,10 +19,11 @@ SECTIONS = {}
 
 def _register():
     from benchmarks import paper_lasso, paper_svm, collective_count, \
-        density_sweep, roofline_bench, tuned_vs_default
+        density_sweep, recovery, roofline_bench, tuned_vs_default
     SECTIONS.update({
         "density": density_sweep.main,
         "tuned": tuned_vs_default.main,
+        "recovery": recovery.main,
         "fig2": paper_lasso.fig2_convergence,
         "table3": paper_lasso.table3_relative_error,
         "fig3": paper_lasso.fig3_runtime,

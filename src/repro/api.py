@@ -19,18 +19,19 @@ from repro.core.api import (BACKENDS, families, lower_solve,
                             resolve_family, solve, solve_sharded)
 from repro.core.types import (FAMILIES, KERNELS, KernelSpec, LassoProblem,
                               LogRegProblem, ProblemFamily, SVMProblem,
-                              SolverConfig, SolverResult, SparseOperand,
-                              build_kernel_params, register_family,
-                              register_kernel)
+                              SolveState, SolverConfig, SolverResult,
+                              SparseOperand, build_kernel_params,
+                              register_family, register_kernel)
+from repro.runtime.elastic import ElasticConfig, solve_elastic
 
 __all__ = [
     # the facade
-    "solve", "solve_sharded", "lower_solve", "resolve_family", "families",
-    "BACKENDS",
+    "solve", "solve_sharded", "solve_elastic", "lower_solve",
+    "resolve_family", "families", "BACKENDS", "ElasticConfig",
     # the registries
     "FAMILIES", "ProblemFamily", "register_family",
     "KERNELS", "KernelSpec", "register_kernel", "build_kernel_params",
     # problem / config / result types
     "LassoProblem", "SVMProblem", "LogRegProblem",
-    "SolverConfig", "SolverResult", "SparseOperand",
+    "SolverConfig", "SolverResult", "SolveState", "SparseOperand",
 ]

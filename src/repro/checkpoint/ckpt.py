@@ -128,10 +128,17 @@ def save_checkpoint(directory: str, step: int, tree: Any,
 
 
 def latest_step(directory: str) -> Optional[int]:
+    """Newest COMPLETE checkpoint step, or None.
+
+    A ``step_<N>`` directory without a manifest.json is a partial write
+    (e.g. a crash simulated mid-copy, or a foreign tool's leftovers —
+    the atomic tmp+rename save never produces one itself) and is
+    skipped: restore-latest must land on a checkpoint it can read."""
     if not os.path.isdir(directory):
         return None
     steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_")]
+             if d.startswith("step_")
+             and os.path.exists(os.path.join(directory, d, "manifest.json"))]
     return max(steps) if steps else None
 
 
@@ -179,7 +186,12 @@ def _axes_exist(part, mesh: Mesh) -> bool:
 
 
 class CheckpointManager:
-    """Retention + async save on top of save/restore."""
+    """Retention + async save on top of save/restore.
+
+    Use as a context manager (or call :meth:`close`) so the last async
+    save thread is joined before the run exits — a dangling daemon
+    thread could otherwise still be mid-``np.savez`` while the caller
+    reads the directory or the interpreter tears down."""
 
     def __init__(self, directory: str, keep: int = 3,
                  async_save: bool = True):
@@ -217,6 +229,17 @@ class CheckpointManager:
         for s in steps[:-self.keep]:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
                           ignore_errors=True)
+
+    def close(self):
+        """Join the outstanding async save (if any). Idempotent."""
+        self.wait()
+
+    def __enter__(self) -> "CheckpointManager":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
     def restore_latest(self, tree_like=None, mesh=None):
         self.wait()

@@ -13,9 +13,10 @@ through one registry-driven ``solve`` call):
 """
 from repro.core.types import (FAMILIES, KERNELS, KernelSpec, LassoProblem,
                               LogRegProblem, ProblemFamily, SVMProblem,
-                              SolverConfig, SolverResult, SparseOperand,
-                              build_kernel_params, register_family,
-                              register_kernel, require_unit_block)
+                              SolveState, SolverConfig, SolverResult,
+                              SparseOperand, build_kernel_params,
+                              register_family, register_kernel,
+                              require_unit_block, resume_carry)
 from repro.core.lasso import (acc_bcd_lasso, acc_cd_lasso, bcd_lasso,
                               cd_lasso, lasso_objective, solve_lasso)
 from repro.core.sa_lasso import (sa_acc_bcd_lasso, sa_acc_cd_lasso,
@@ -34,7 +35,8 @@ __all__ = [
     "KERNELS", "KernelSpec", "register_kernel", "build_kernel_params",
     "require_unit_block",
     "LassoProblem", "SVMProblem", "LogRegProblem",
-    "SolverConfig", "SolverResult", "SparseOperand",
+    "SolverConfig", "SolverResult", "SolveState", "SparseOperand",
+    "resume_carry",
     "acc_bcd_lasso", "acc_cd_lasso", "bcd_lasso", "cd_lasso", "solve_lasso",
     "lasso_objective",
     "sa_acc_bcd_lasso", "sa_acc_cd_lasso", "sa_bcd_lasso", "sa_cd_lasso",

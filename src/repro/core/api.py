@@ -31,8 +31,8 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.types import (FAMILIES, ProblemFamily, SolverConfig,
-                              SolverResult, SparseOperand)
+from repro.core.types import (FAMILIES, ProblemFamily, SolveState,
+                              SolverConfig, SolverResult, SparseOperand)
 
 # Importing the family modules is what populates FAMILIES: each family
 # self-registers from its own module (the ``KERNELS`` pattern). A new
@@ -167,7 +167,8 @@ def _specs(fam: ProblemFamily, axes: AxisNames):
 def solve_sharded(problem, cfg: SolverConfig, mesh: Mesh,
                   axes: Optional[AxisNames] = None,
                   family: Optional[object] = None,
-                  x0=None) -> SolverResult:
+                  x0=None, state: Optional[SolveState] = None
+                  ) -> SolverResult:
     """Distributed solve for ANY registered family.
 
     Pads the partitioned axis of A to a multiple of the shard count
@@ -182,6 +183,13 @@ def solve_sharded(problem, cfg: SolverConfig, mesh: Mesh,
 
     ``axes`` may be a single mesh axis or a tuple (e.g. ('pod', 'data'))
     — reductions then span pods hierarchically.
+
+    ``state``: a LOGICAL (unpadded) :class:`SolveState` from a previous
+    solve's ``aux["state"]`` — its "partition" leaves (per the family's
+    ``state_layout``) are zero-padded and re-sharded onto THIS mesh, so
+    a state checkpointed on one mesh resumes on any other (the elastic
+    recovery path). The returned ``aux["state"]`` is logical again:
+    partition leaves are unpadded before they leave this function.
     """
     fam = resolve_family(problem, family)
     if axes is None:
@@ -204,6 +212,9 @@ def solve_sharded(problem, cfg: SolverConfig, mesh: Mesh,
     vec, a_spec, b_spec, x_out = _specs(fam, axes)
     aux_specs = tuple(vec if layout == "partition" else P()
                       for _, layout in fam.aux_out)
+    layout = fam.state_layout(cfg) if fam.state_layout is not None else ()
+    state_specs = tuple(vec if lay == "partition" else P()
+                        for _, lay in layout)
     # a sparse operand's leaves all carry a leading stacked-shard axis,
     # so ONE leading-axis spec partitions the whole pytree.
     in_specs = [vec if sparse else a_spec, b_spec]
@@ -216,24 +227,56 @@ def solve_sharded(problem, cfg: SolverConfig, mesh: Mesh,
         else:
             in_specs.append(P())
         args.append(jnp.asarray(x0, cfg.dtype))
+    n_x0 = len(args) - 2
+    if state is not None:
+        if not layout:
+            raise ValueError(
+                f"family {fam.name!r} declares no state_layout — it "
+                f"cannot resume from a SolveState")
+        for name, lay in layout:
+            leaf = np.asarray(state.carry[name])
+            if lay == "partition":
+                leaf = _pad_to(leaf, padded, 0)
+                in_specs.append(vec)
+            else:
+                in_specs.append(P())
+            args.append(jnp.asarray(leaf, cfg.dtype))
 
-    def local_solve(A_loc, b_loc, *x0_loc):
+    def local_solve(A_loc, b_loc, *rest):
         if sparse:
             A_loc = A_loc.squeeze_shard()
         local = dataclasses.replace(problem, A=A_loc, b=b_loc)
+        kw = {}
+        if state is not None:
+            kw["state"] = SolveState(
+                int(state.iteration),
+                {name: leaf for (name, _), leaf
+                 in zip(layout, rest[n_x0:])})
         res = fam.solve(local, cfg, axis_name=axes,
-                        x0=x0_loc[0] if x0_loc else None)
-        return (res.x, res.objective) \
+                        x0=rest[0] if n_x0 else None, **kw)
+        outs = (res.x, res.objective) \
             + tuple(res.aux[k] for k, _ in fam.aux_out)
+        if layout:
+            outs += tuple(res.aux["state"].carry[name]
+                          for name, _ in layout)
+        return outs
 
     fn = shard_map(local_solve, mesh=mesh, in_specs=tuple(in_specs),
-                   out_specs=(x_out, P()) + aux_specs, check_rep=False)
+                   out_specs=(x_out, P()) + aux_specs + state_specs,
+                   check_rep=False)
     out = jax.jit(fn)(*args)
     x, objective = out[0], out[1]
     if fam.partition == "col":
         x = x[:orig]
-    aux = {k: (v[:orig] if layout == "partition" else v)
-           for (k, layout), v in zip(fam.aux_out, out[2:])}
+    n_aux = len(fam.aux_out)
+    aux = {k: (v[:orig] if layout_ == "partition" else v)
+           for (k, layout_), v in zip(fam.aux_out, out[2:2 + n_aux])}
+    if layout:
+        start = 0 if state is None else int(state.iteration)
+        aux["state"] = SolveState(
+            start + cfg.iterations,
+            {name: (v[:orig] if lay == "partition" else v)
+             for (name, lay), v in zip(layout, out[2 + n_aux:])})
     return SolverResult(x=x, objective=objective, aux=aux)
 
 
@@ -271,26 +314,30 @@ def lower_solve(family: object, cfg: SolverConfig, mesh: Mesh,
 # ---------------------------------------------------------------------------
 
 def _local_backend(fam: ProblemFamily, problem, cfg: SolverConfig, *,
-                   axis_name=None, mesh=None, axes=None, x0=None
-                   ) -> SolverResult:
+                   axis_name=None, mesh=None, axes=None, x0=None,
+                   state=None) -> SolverResult:
     if mesh is not None or axes is not None:
         raise ValueError(
             "mesh=/axes= are only meaningful with backend='sharded' "
             "(the local backend runs single-host, or inside a "
             "caller-managed shard_map via axis_name=)")
-    return fam.solve(problem, cfg, axis_name=axis_name, x0=x0)
+    # keyword only when set: families registered WITHOUT resume support
+    # (no `state` parameter) keep working for ordinary solves.
+    kw = {} if state is None else {"state": state}
+    return fam.solve(problem, cfg, axis_name=axis_name, x0=x0, **kw)
 
 
 def _sharded_backend(fam: ProblemFamily, problem, cfg: SolverConfig, *,
-                     axis_name=None, mesh=None, axes=None, x0=None
-                     ) -> SolverResult:
+                     axis_name=None, mesh=None, axes=None, x0=None,
+                     state=None) -> SolverResult:
     if mesh is None:
         raise ValueError("backend='sharded' requires mesh=...")
     if axis_name is not None:
         raise ValueError(
             "axis_name= is managed by the sharded backend; pass axes= "
             "to choose the mesh axes")
-    return solve_sharded(problem, cfg, mesh, axes=axes, family=fam, x0=x0)
+    return solve_sharded(problem, cfg, mesh, axes=axes, family=fam, x0=x0,
+                         state=state)
 
 
 BACKENDS: Dict[str, Callable] = {
@@ -304,6 +351,7 @@ def solve(problem, cfg: Optional[SolverConfig] = None,
           family: Optional[object] = None,
           axis_name=None, mesh: Optional[Mesh] = None,
           axes: Optional[AxisNames] = None, x0=None,
+          state: Optional[SolveState] = None,
           tune: Optional[str] = None,
           callbacks: Optional[Sequence[Callable]] = None) -> SolverResult:
     """Solve any registered problem family on any registered backend.
@@ -319,6 +367,14 @@ def solve(problem, cfg: Optional[SolverConfig] = None,
               x, SVM/K-SVM dual alpha, logreg w) — threaded through to
               every solver; the objective trace resumes where a previous
               solve's left off.
+    state:    optional :class:`SolveState` from a previous solve's
+              ``result.aux["state"]`` — resumes the FULL recurrence
+              state (all carries + RNG/θ-schedule offset), so the
+              continued solve is bit-identical to an uninterrupted one
+              on the same mesh. Mutually exclusive with x0. On the
+              sharded backend the state is re-padded/re-sharded, so a
+              state saved on one mesh restores onto any other (elastic
+              recovery; see ``repro.runtime.elastic``).
     tune:     ``"auto"`` replaces cfg's tunables (s, block_size,
               use_pallas, symmetric_gram) with ``repro.tune.autotune``'s
               calibrated-model selection before solving — iterations,
@@ -359,7 +415,7 @@ def solve(problem, cfg: Optional[SolverConfig] = None,
         cfg = tune_mod.autotune(problem, cfg, family=fam)
         tuned = True
     result = BACKENDS[backend](fam, problem, cfg, axis_name=axis_name,
-                               mesh=mesh, axes=axes, x0=x0)
+                               mesh=mesh, axes=axes, x0=x0, state=state)
     if tuned:
         result.aux["tuned_config"] = cfg
     for cb in callbacks or ():

@@ -55,8 +55,9 @@ from repro.core import cost_model, linalg
 from repro.core.sa_loop import grouped_impl_label, run_grouped
 from repro.core.sparse_exec import (cross_block, prep_operand,
                                     row_block_ops, spmm_aux)
-from repro.core.types import (SVMProblem, SolverConfig, SolverResult,
-                              SparseOperand, register_family)
+from repro.core.types import (SVMProblem, SolveState, SolverConfig,
+                              SolverResult, SparseOperand, register_family,
+                              resume_carry)
 from repro.kernels import spmm
 from repro.kernels.svm_inner import inner_impl, svm_inner_loop
 
@@ -144,14 +145,21 @@ def kernel_dual_objective(problem: SVMProblem, alpha,
 
 
 def _init_state(problem: SVMProblem, cfg: SolverConfig, axis_name,
-                alpha0):
+                alpha0, carry0=None):
     """alpha, its primal shadow x = A^T (b alpha) (local shard), the
     replicated dual residual f = K(A, A)(b alpha), and the starting dual
     objective f_D(alpha0) for the incremental trace. alpha0 = None starts
-    at zero, where f, x and the dual are zero without any communication."""
+    at zero, where f, x and the dual are zero without any communication.
+    A restored ``carry0`` (SolveState.carry) bypasses the expensive full
+    K(A, A) rebuild entirely — every leaf comes back verbatim."""
     A = prep_operand(problem.A, cfg.dtype)
     b = jnp.asarray(problem.b, cfg.dtype)
     m = A.shape[0]
+    if carry0 is not None:
+        return (A, b, jnp.asarray(carry0["alpha"], cfg.dtype),
+                jnp.asarray(carry0["x"], cfg.dtype),
+                jnp.asarray(carry0["f"], cfg.dtype),
+                jnp.asarray(carry0["dual"], cfg.dtype))
     if alpha0 is None:
         alpha = jnp.zeros((m,), cfg.dtype)
         f = jnp.zeros((m,), cfg.dtype)
@@ -176,7 +184,8 @@ def _init_state(problem: SVMProblem, cfg: SolverConfig, axis_name,
 
 def kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
               axis_name: Optional[object] = None,
-              alpha0=None) -> SolverResult:
+              alpha0=None, state: Optional[SolveState] = None
+              ) -> SolverResult:
     """Kernel block dual coordinate descent (K-BDCD).
 
     Per iteration: sample a block B of mu rows, Allreduce the fused
@@ -195,7 +204,10 @@ def kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
     gamma = jnp.asarray(problem.gamma, cfg.dtype)
     nu = jnp.asarray(problem.nu, cfg.dtype)
     key = jax.random.key(cfg.seed)
-    A, b, alpha, x, f, dual0 = _init_state(problem, cfg, axis_name, alpha0)
+    carry0 = resume_carry(state, alpha0, "kbdcd_svm")
+    start = 0 if state is None else int(state.iteration)
+    A, b, alpha, x, f, dual0 = _init_state(problem, cfg, axis_name, alpha0,
+                                           carry0)
     take, _, densify, apply_t = row_block_ops(A, cfg)
     norms_local = _local_norms(A, problem.kernel_spec.needs_norms)
     m = A.shape[0]
@@ -230,15 +242,21 @@ def kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
         return (alpha, x, f, dual), obj
 
     (alpha, x, f, dual), objs = jax.lax.scan(
-        step, (alpha, x, f, dual0), jnp.arange(1, cfg.iterations + 1))
+        step, (alpha, x, f, dual0),
+        jnp.arange(start + 1, start + cfg.iterations + 1))
     return SolverResult(x=x, objective=objs,
                         aux={"alpha": alpha, "dual": dual, "f": f,
+                             "state": SolveState(
+                                 start + cfg.iterations,
+                                 {"alpha": alpha, "x": x, "f": f,
+                                  "dual": dual}),
                              **spmm_aux(A, cfg, "cross")})
 
 
 def sa_kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
                  axis_name: Optional[object] = None,
-                 alpha0=None) -> SolverResult:
+                 alpha0=None, state: Optional[SolveState] = None
+                 ) -> SolverResult:
     """s-step unrolled K-BDCD: identical iterates to ``kbdcd_svm`` in
     exact arithmetic, ONE Allreduce per s inner iterations.
 
@@ -255,7 +273,10 @@ def sa_kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
     gamma_f, nu_f = float(problem.gamma), float(problem.nu)
     key = jax.random.key(cfg.seed)
     s, H = cfg.s, cfg.iterations
-    A, b, alpha, x, f, dual0 = _init_state(problem, cfg, axis_name, alpha0)
+    carry0 = resume_carry(state, alpha0, "sa_kbdcd_svm")
+    h0 = 0 if state is None else int(state.iteration)
+    A, b, alpha, x, f, dual0 = _init_state(problem, cfg, axis_name, alpha0,
+                                           carry0)
     take, _, densify, apply_t = row_block_ops(A, cfg)
     norms_local = _local_norms(A, problem.kernel_spec.needs_norms)
     m = A.shape[0]
@@ -292,9 +313,12 @@ def sa_kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
         return (alpha, x, f, dual), objs
 
     (alpha, x, f, dual), objs = run_grouped(
-        group, (alpha, x, f, dual0), H, s, cfg.dtype)
+        group, (alpha, x, f, dual0), H, s, cfg.dtype, start=h0)
     return SolverResult(x=x, objective=objs,
                         aux={"alpha": alpha, "dual": dual, "f": f,
+                             "state": SolveState(
+                                 h0 + H, {"alpha": alpha, "x": x, "f": f,
+                                          "dual": dual}),
                              "inner_impl": grouped_impl_label(
                                  inner_impl, H, s, mu, cfg.use_pallas,
                                  jnp.dtype(cfg.dtype).itemsize),
@@ -353,16 +377,19 @@ def _cli_describe(args, res, elapsed: float) -> str:
     # the kernelized message is the (m, s*mu) cross block — replicated
     # memory grows with s*mu, so the candidate grid stays smaller.
     tune_space={"s": (1, 2, 4, 8, 16, 32), "mu": (1, 2, 4, 8)},
+    state_layout=lambda cfg: (("alpha", "replicated"), ("x", "partition"),
+                              ("f", "replicated"), ("dual", "replicated")),
 )
 def solve_ksvm(problem: SVMProblem, cfg: SolverConfig,
                axis_name: Optional[object] = None,
-               x0=None) -> SolverResult:
+               x0=None, state=None) -> SolverResult:
     """Dispatch on cfg.s: classical K-BDCD vs the SA unroll.
 
     x0: optional warm start for the dual vector alpha (replicated (m,));
     rebuilding the dual residual f = K(b alpha) costs one extra setup
-    Allreduce (zero-start costs none).
+    Allreduce (zero-start costs none; a ``state=`` resume restores f
+    verbatim and costs none either).
     """
     if cfg.s > 1:
-        return sa_kbdcd_svm(problem, cfg, axis_name, x0)
-    return kbdcd_svm(problem, cfg, axis_name, x0)
+        return sa_kbdcd_svm(problem, cfg, axis_name, x0, state)
+    return kbdcd_svm(problem, cfg, axis_name, x0, state)

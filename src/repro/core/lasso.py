@@ -24,9 +24,10 @@ import jax.numpy as jnp
 
 from repro.core import cost_model, linalg, prox as prox_lib
 from repro.core.sparse_exec import col_block_ops, prep_operand, spmm_aux
-from repro.core.types import (LassoProblem, SolverConfig, SolverResult,
-                              SparseOperand, operand_matvec,
-                              register_family, require_unit_block)
+from repro.core.types import (LassoProblem, SolveState, SolverConfig,
+                              SolverResult, SparseOperand, operand_matvec,
+                              register_family, require_unit_block,
+                              resume_carry)
 
 
 def _validate_groups(groups, n: int, mu: int) -> None:
@@ -95,17 +96,25 @@ def _objective(residual, x, problem, axis_name):
 
 def bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
               axis_name: Optional[object] = None,
-              x0=None) -> SolverResult:
+              x0=None, state: Optional[SolveState] = None) -> SolverResult:
     """Classical (non-accelerated) randomized block coordinate descent.
 
     x0: optional warm start (replicated (n,) vector). The residual is
     rebuilt locally from the row shard — no communication.
+    state: optional checkpointed :class:`SolveState` (carries x AND the
+    residual, plus the global iteration offset) — the resumed solve
+    continues the uninterrupted iterate sequence exactly.
     """
     A, b, n, mu, q, sampler, prox = _prep(problem, cfg)
     block_gram, block_apply = col_block_ops(A, cfg)
     key = jax.random.key(cfg.seed)
+    carry0 = resume_carry(state, x0, "bcd_lasso")
+    start = 0 if state is None else int(state.iteration)
 
-    if x0 is None:
+    if carry0 is not None:
+        x0 = jnp.asarray(carry0["x"], cfg.dtype)
+        r0 = jnp.asarray(carry0["residual"], cfg.dtype)
+    elif x0 is None:
         x0 = jnp.zeros((n,), cfg.dtype)
         r0 = -b  # residual Ax - b at x = 0 (row shard)
     else:
@@ -128,9 +137,12 @@ def bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
         obj = _objective(r, x, problem, axis_name) if cfg.track_objective else 0.0
         return (x, r), obj
 
-    (x, r), objs = jax.lax.scan(step, (x0, r0), jnp.arange(1, cfg.iterations + 1))
+    (x, r), objs = jax.lax.scan(
+        step, (x0, r0), jnp.arange(start + 1, start + cfg.iterations + 1))
     return SolverResult(x=x, objective=objs,
                         aux={"residual": r,
+                             "state": SolveState(start + cfg.iterations,
+                                                 {"x": x, "residual": r}),
                              **spmm_aux(A, cfg, "col_gram", extra=1)})
 
 
@@ -140,7 +152,7 @@ def bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
 
 def acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
                   axis_name: Optional[object] = None,
-                  x0=None) -> SolverResult:
+                  x0=None, state: Optional[SolveState] = None) -> SolverResult:
     """Paper Algorithm 1: accelerated block coordinate descent for Lasso.
 
     State: z, y in R^n (replicated), ztil = Az - b, ytil = Ay in R^m
@@ -148,23 +160,35 @@ def acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
 
     x0: optional warm start — seeds z (y restarts at 0, i.e. the
     acceleration momentum resets, the standard warm-start convention).
+    state: optional checkpointed :class:`SolveState` — resumes z, y,
+    ztil, ytil and the theta schedule at the recorded global iteration
+    (the schedule is a deterministic recurrence, so recomputing it over
+    ``start + H`` steps reproduces the uninterrupted prefix bitwise).
     """
     A, b, n, mu, q, sampler, prox = _prep(problem, cfg)
     block_gram, block_apply = col_block_ops(A, cfg)
     key = jax.random.key(cfg.seed)
     H = cfg.iterations
+    carry0 = resume_carry(state, x0, "acc_bcd_lasso")
+    start = 0 if state is None else int(state.iteration)
 
     theta0 = jnp.asarray(mu / n, cfg.dtype)
-    thetas = linalg.theta_schedule(theta0, H, q)          # (H+1,)
+    thetas = linalg.theta_schedule(theta0, start + H, q)  # (start+H+1,)
 
-    if x0 is None:
-        z0 = jnp.zeros((n,), cfg.dtype)
-        ztil0 = -b                                        # A z0 - b
+    if carry0 is not None:
+        z0 = jnp.asarray(carry0["z"], cfg.dtype)
+        y0 = jnp.asarray(carry0["y"], cfg.dtype)
+        ztil0 = jnp.asarray(carry0["ztil"], cfg.dtype)
+        ytil0 = jnp.asarray(carry0["ytil"], cfg.dtype)
     else:
-        z0 = jnp.asarray(x0, cfg.dtype)
-        ztil0 = operand_matvec(A, z0) - b
-    y0 = jnp.zeros((n,), cfg.dtype)
-    ytil0 = jnp.zeros_like(b)                             # A y0
+        if x0 is None:
+            z0 = jnp.zeros((n,), cfg.dtype)
+            ztil0 = -b                                    # A z0 - b
+        else:
+            z0 = jnp.asarray(x0, cfg.dtype)
+            ztil0 = operand_matvec(A, z0) - b
+        y0 = jnp.zeros((n,), cfg.dtype)
+        ytil0 = jnp.zeros_like(b)                         # A y0
 
     def step(carry, inputs):
         z, y, ztil, ytil = carry
@@ -193,30 +217,34 @@ def acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
             obj = jnp.asarray(0.0, cfg.dtype)
         return (z, y, ztil, ytil), obj
 
-    hs = jnp.arange(1, H + 1)
+    hs = jnp.arange(start + 1, start + H + 1)
     (z, y, ztil, ytil), objs = jax.lax.scan(
-        step, (z0, y0, ztil0, ytil0), (hs, thetas[:-1], thetas[1:]))
+        step, (z0, y0, ztil0, ytil0), (hs, thetas[start:-1],
+                                       thetas[start + 1:]))
     thH = thetas[-1]
     x = thH * thH * y + z                                 # line 19
     return SolverResult(x=x, objective=objs,
                         aux={"residual": thH * thH * ytil + ztil,
+                             "state": SolveState(
+                                 start + H, {"z": z, "y": y,
+                                             "ztil": ztil, "ytil": ytil}),
                              **spmm_aux(A, cfg, "col_gram", extra=1)})
 
 
 def cd_lasso(problem: LassoProblem, cfg: SolverConfig,
              axis_name: Optional[object] = None,
-             x0=None) -> SolverResult:
+             x0=None, state: Optional[SolveState] = None) -> SolverResult:
     """CD = BCD with mu = 1."""
     require_unit_block(cfg, "cd_lasso")
-    return bcd_lasso(problem, cfg, axis_name, x0)
+    return bcd_lasso(problem, cfg, axis_name, x0, state)
 
 
 def acc_cd_lasso(problem: LassoProblem, cfg: SolverConfig,
                  axis_name: Optional[object] = None,
-                 x0=None) -> SolverResult:
+                 x0=None, state: Optional[SolveState] = None) -> SolverResult:
     """accCD = accBCD with mu = 1."""
     require_unit_block(cfg, "acc_cd_lasso")
-    return acc_bcd_lasso(problem, cfg, axis_name, x0)
+    return acc_bcd_lasso(problem, cfg, axis_name, x0, state)
 
 
 def lasso_objective(problem: LassoProblem, x,
@@ -266,10 +294,15 @@ def _cli_describe(args, res, elapsed: float) -> str:
     bench_block_size=4,
     bench_problem_kwargs={"lam": 0.1},
     supports_symmetric_gram=True,
+    state_layout=lambda cfg: (
+        (("z", "replicated"), ("y", "replicated"),
+         ("ztil", "partition"), ("ytil", "partition"))
+        if cfg.accelerated else
+        (("x", "replicated"), ("residual", "partition"))),
 )
 def solve_lasso(problem: LassoProblem, cfg: SolverConfig,
                 axis_name: Optional[object] = None,
-                x0=None) -> SolverResult:
+                x0=None, state=None) -> SolverResult:
     """Dispatch on (accelerated, s): s == 1 -> this module; s > 1 -> SA."""
     if cfg.s > 1:
         from repro.core import sa_lasso
@@ -277,4 +310,4 @@ def solve_lasso(problem: LassoProblem, cfg: SolverConfig,
               else sa_lasso.sa_bcd_lasso)
     else:
         fn = acc_bcd_lasso if cfg.accelerated else bcd_lasso
-    return fn(problem, cfg, axis_name, x0)
+    return fn(problem, cfg, axis_name, x0, state)

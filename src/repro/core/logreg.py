@@ -50,9 +50,9 @@ import jax.numpy as jnp
 from repro.core import cost_model, linalg
 from repro.core.sparse_exec import (cross_block, prep_operand,
                                     row_block_ops, spmm_aux)
-from repro.core.types import (LogRegProblem, SolverConfig, SolverResult,
-                              SparseOperand, operand_matvec,
-                              register_family)
+from repro.core.types import (LogRegProblem, SolveState, SolverConfig,
+                              SolverResult, SparseOperand, operand_matvec,
+                              register_family, resume_carry)
 
 
 def logreg_objective(problem: LogRegProblem, w,
@@ -76,12 +76,19 @@ def _tracked_objective(f, sq, b, lam):
     return jnp.mean(jnp.logaddexp(0.0, -b * f)) + 0.5 * lam * sq
 
 
-def _init_state(problem: LogRegProblem, cfg: SolverConfig, axis_name, x0):
+def _init_state(problem: LogRegProblem, cfg: SolverConfig, axis_name, x0,
+                carry0=None):
     """w (local shard), margins f = A w and sq = ||w||^2 (replicated).
     x0 = None starts at zero, where f and sq are zero without any
-    communication; a warm start rebuilds them with one setup Allreduce."""
+    communication; a warm start rebuilds them with one setup Allreduce.
+    A restored ``carry0`` (SolveState.carry) restores all three leaves
+    verbatim — no matvec, no Allreduce."""
     A = prep_operand(problem.A, cfg.dtype)
     b = jnp.asarray(problem.b, cfg.dtype)
+    if carry0 is not None:
+        return (A, b, jnp.asarray(carry0["w"], cfg.dtype),
+                jnp.asarray(carry0["margins"], cfg.dtype),
+                jnp.asarray(carry0["sq"], cfg.dtype))
     if x0 is None:
         w = jnp.zeros((A.shape[1],), cfg.dtype)
         f = jnp.zeros((A.shape[0],), cfg.dtype)
@@ -103,13 +110,15 @@ def _step_size(G, mu: int, lam, power_iters: int):
 
 def bcd_logreg(problem: LogRegProblem, cfg: SolverConfig,
                axis_name: Optional[object] = None,
-               x0=None) -> SolverResult:
+               x0=None, state: Optional[SolveState] = None) -> SolverResult:
     """Classical (synchronous) block CD / mini-batch logistic regression:
     ONE fused Allreduce of the (m, mu) cross block per iteration."""
     mu = cfg.block_size
     lam = jnp.asarray(problem.lam, cfg.dtype)
     key = jax.random.key(cfg.seed)
-    A, b, w, f, sq = _init_state(problem, cfg, axis_name, x0)
+    carry0 = resume_carry(state, x0, "bcd_logreg")
+    start = 0 if state is None else int(state.iteration)
+    A, b, w, f, sq = _init_state(problem, cfg, axis_name, x0, carry0)
     take, _, densify, apply_t = row_block_ops(A, cfg)
     m = A.shape[0]
 
@@ -134,9 +143,12 @@ def bcd_logreg(problem: LogRegProblem, cfg: SolverConfig,
         return (w, f, sq), obj
 
     (w, f, sq), objs = jax.lax.scan(
-        step, (w, f, sq), jnp.arange(1, cfg.iterations + 1))
+        step, (w, f, sq), jnp.arange(start + 1, start + cfg.iterations + 1))
     return SolverResult(x=w, objective=objs,
                         aux={"margins": f, "w_norm_sq": sq,
+                             "state": SolveState(
+                                 start + cfg.iterations,
+                                 {"w": w, "margins": f, "sq": sq}),
                              **spmm_aux(A, cfg, "cross")})
 
 
@@ -174,15 +186,17 @@ def _cli_describe(args, res, elapsed: float) -> str:
     bench_problem_kwargs={"lam": 1e-3},
     # same (m, s*mu) cross-block message shape as the kernel SVM.
     tune_space={"s": (1, 2, 4, 8, 16, 32), "mu": (1, 2, 4, 8)},
+    state_layout=lambda cfg: (("w", "partition"), ("margins", "replicated"),
+                              ("sq", "replicated")),
 )
 def solve_logreg(problem: LogRegProblem, cfg: SolverConfig,
                  axis_name: Optional[object] = None,
-                 x0=None) -> SolverResult:
+                 x0=None, state=None) -> SolverResult:
     """Dispatch on cfg.s: classical BCD vs the SA s-step unroll.
 
     ``cfg.accelerated`` is ignored (no accelerated variant, as for SVM).
     """
     if cfg.s > 1:
         from repro.core.sa_logreg import sa_bcd_logreg
-        return sa_bcd_logreg(problem, cfg, axis_name, x0)
-    return bcd_logreg(problem, cfg, axis_name, x0)
+        return sa_bcd_logreg(problem, cfg, axis_name, x0, state)
+    return bcd_logreg(problem, cfg, axis_name, x0, state)

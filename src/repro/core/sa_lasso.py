@@ -26,9 +26,9 @@ from repro.core import linalg
 from repro.core.lasso import _objective, _prep
 from repro.core.sa_loop import run_grouped
 from repro.core.sparse_exec import col_block_ops, spmm_aux
-from repro.core.types import (LassoProblem, SolverConfig, SolverResult,
-                              SparseOperand, operand_matvec,
-                              require_unit_block)
+from repro.core.types import (LassoProblem, SolveState, SolverConfig,
+                              SolverResult, SparseOperand, operand_matvec,
+                              require_unit_block, resume_carry)
 from repro.kernels import spmm
 from repro.kernels.gram import gram_t
 
@@ -93,15 +93,20 @@ def _sample_all(key, sampler, start, s_grp):
 
 def sa_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
                  axis_name: Optional[object] = None,
-                 x0=None) -> SolverResult:
+                 x0=None, state: Optional[SolveState] = None) -> SolverResult:
     A, b, n, mu, q, sampler, prox = _prep(problem, cfg)
     sparse = isinstance(A, SparseOperand)
     block_gram, _ = col_block_ops(A, cfg)
     key = jax.random.key(cfg.seed)
     s, H = cfg.s, cfg.iterations
     m_loc = A.shape[0]
+    carry0 = resume_carry(state, x0, "sa_bcd_lasso")
+    h0 = 0 if state is None else int(state.iteration)
 
-    if x0 is None:
+    if carry0 is not None:
+        x0 = jnp.asarray(carry0["x"], cfg.dtype)
+        r0 = jnp.asarray(carry0["residual"], cfg.dtype)
+    elif x0 is None:
         x0 = jnp.zeros((n,), cfg.dtype)
         r0 = -b
     else:
@@ -166,9 +171,11 @@ def sa_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
             objs = jnp.zeros((s,), cfg.dtype)
         return (x, r_new), objs
 
-    (x, r), objs = run_grouped(group, (x0, r0), H, s, cfg.dtype)
+    (x, r), objs = run_grouped(group, (x0, r0), H, s, cfg.dtype, start=h0)
     return SolverResult(x=x, objective=objs,
                         aux={"residual": r,
+                             "state": SolveState(h0 + H,
+                                                 {"x": x, "residual": r}),
                              **spmm_aux(A, cfg, "col_gram", H=H, extra=1)})
 
 
@@ -178,25 +185,34 @@ def sa_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
 
 def sa_acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
                      axis_name: Optional[object] = None,
-                     x0=None) -> SolverResult:
+                     x0=None, state: Optional[SolveState] = None
+                     ) -> SolverResult:
     A, b, n, mu, q, sampler, prox = _prep(problem, cfg)
     sparse = isinstance(A, SparseOperand)
     block_gram, _ = col_block_ops(A, cfg)
     key = jax.random.key(cfg.seed)
     s, H = cfg.s, cfg.iterations
     m_loc = A.shape[0]
+    carry0 = resume_carry(state, x0, "sa_acc_bcd_lasso")
+    h0 = 0 if state is None else int(state.iteration)
 
     theta0 = jnp.asarray(mu / n, cfg.dtype)
-    thetas = linalg.theta_schedule(theta0, H, q)          # (H+1,)
+    thetas = linalg.theta_schedule(theta0, h0 + H, q)     # (h0+H+1,)
 
-    if x0 is None:
-        z0 = jnp.zeros((n,), cfg.dtype)
-        ztil0 = -b
+    if carry0 is not None:
+        z0 = jnp.asarray(carry0["z"], cfg.dtype)
+        y0 = jnp.asarray(carry0["y"], cfg.dtype)
+        ztil0 = jnp.asarray(carry0["ztil"], cfg.dtype)
+        ytil0 = jnp.asarray(carry0["ytil"], cfg.dtype)
     else:
-        z0 = jnp.asarray(x0, cfg.dtype)
-        ztil0 = operand_matvec(A, z0) - b
-    y0 = jnp.zeros((n,), cfg.dtype)
-    ytil0 = jnp.zeros_like(b)
+        if x0 is None:
+            z0 = jnp.zeros((n,), cfg.dtype)
+            ztil0 = -b
+        else:
+            z0 = jnp.asarray(x0, cfg.dtype)
+            ztil0 = operand_matvec(A, z0) - b
+        y0 = jnp.zeros((n,), cfg.dtype)
+        ytil0 = jnp.zeros_like(b)
 
     def group(carry, start, s):
         z, y, ztil, ytil = carry
@@ -275,19 +291,22 @@ def sa_acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
         return (z, y, ztil_new, ytil_new), objs
 
     (z, y, ztil, ytil), objs = run_grouped(
-        group, (z0, y0, ztil0, ytil0), H, s, cfg.dtype)
+        group, (z0, y0, ztil0, ytil0), H, s, cfg.dtype, start=h0)
     thH = thetas[-1]
     x = thH * thH * y + z
     return SolverResult(x=x, objective=objs,
                         aux={"residual": thH * thH * ytil + ztil,
+                             "state": SolveState(
+                                 h0 + H, {"z": z, "y": y,
+                                          "ztil": ztil, "ytil": ytil}),
                              **spmm_aux(A, cfg, "col_gram", H=H, extra=2)})
 
 
-def sa_cd_lasso(problem, cfg, axis_name=None, x0=None):
+def sa_cd_lasso(problem, cfg, axis_name=None, x0=None, state=None):
     require_unit_block(cfg, "sa_cd_lasso")
-    return sa_bcd_lasso(problem, cfg, axis_name, x0)
+    return sa_bcd_lasso(problem, cfg, axis_name, x0, state)
 
 
-def sa_acc_cd_lasso(problem, cfg, axis_name=None, x0=None):
+def sa_acc_cd_lasso(problem, cfg, axis_name=None, x0=None, state=None):
     require_unit_block(cfg, "sa_acc_cd_lasso")
-    return sa_acc_bcd_lasso(problem, cfg, axis_name, x0)
+    return sa_acc_bcd_lasso(problem, cfg, axis_name, x0, state)

@@ -38,12 +38,14 @@ from repro.core import linalg
 from repro.core.logreg import _init_state, _step_size, _tracked_objective
 from repro.core.sa_loop import run_grouped
 from repro.core.sparse_exec import cross_block, row_block_ops, spmm_aux
-from repro.core.types import LogRegProblem, SolverConfig, SolverResult
+from repro.core.types import (LogRegProblem, SolveState, SolverConfig,
+                              SolverResult, resume_carry)
 
 
 def sa_bcd_logreg(problem: LogRegProblem, cfg: SolverConfig,
                   axis_name: Optional[object] = None,
-                  x0=None) -> SolverResult:
+                  x0=None, state: Optional[SolveState] = None
+                  ) -> SolverResult:
     """s-step unrolled BCD logistic regression: identical iterates to
     ``bcd_logreg`` in exact arithmetic, ONE Allreduce per s inner
     iterations."""
@@ -51,7 +53,9 @@ def sa_bcd_logreg(problem: LogRegProblem, cfg: SolverConfig,
     lam = jnp.asarray(problem.lam, cfg.dtype)
     key = jax.random.key(cfg.seed)
     s, H = cfg.s, cfg.iterations
-    A, b, w, f, sq = _init_state(problem, cfg, axis_name, x0)
+    carry0 = resume_carry(state, x0, "sa_bcd_logreg")
+    h0 = 0 if state is None else int(state.iteration)
+    A, b, w, f, sq = _init_state(problem, cfg, axis_name, x0, carry0)
     take, _, densify, apply_t = row_block_ops(A, cfg)
     m = A.shape[0]
 
@@ -99,7 +103,10 @@ def sa_bcd_logreg(problem: LogRegProblem, cfg: SolverConfig,
         w = rho * w + apply_t(Y, U.reshape(s_grp * mu))
         return (w, f, sq), objs
 
-    (w, f, sq), objs = run_grouped(group, (w, f, sq), H, s, cfg.dtype)
+    (w, f, sq), objs = run_grouped(group, (w, f, sq), H, s, cfg.dtype,
+                                   start=h0)
     return SolverResult(x=w, objective=objs,
                         aux={"margins": f, "w_norm_sq": sq,
+                             "state": SolveState(
+                                 h0 + H, {"w": w, "margins": f, "sq": sq}),
                              **spmm_aux(A, cfg, "cross", H=H)})

@@ -11,17 +11,25 @@ import jax
 import jax.numpy as jnp
 
 
-def run_grouped(group, carry, H: int, s: int, dtype):
+def run_grouped(group, carry, H: int, s: int, dtype, start: int = 0):
     """Run ``group(carry, start, s_grp) -> (carry, objs (s_grp,))`` over
-    the full schedule; returns (carry, objs (H,))."""
+    the full schedule; returns (carry, objs (H,)).
+
+    ``start`` (a host int) offsets the global iteration ids — a solve
+    resumed from a checkpointed :class:`~repro.core.types.SolveState`
+    at iteration ``start`` passes it here so the groups keep the
+    uninterrupted schedule's ``fold_in`` ids. Checkpoints are taken at
+    outer-iteration boundaries, so ``start`` is a multiple of the
+    original run's s whenever group alignment matters (DESIGN.md
+    "Elastic recovery of SA recurrences")."""
     K, rem = divmod(H, s)
     objs = jnp.zeros((0,), dtype)
     if K:        # full s-step groups
         carry, objs = jax.lax.scan(
-            lambda c, k: group(c, k * s, s), carry, jnp.arange(K))
+            lambda c, k: group(c, start + k * s, s), carry, jnp.arange(K))
         objs = objs.reshape(K * s)
     if rem:      # remainder tail group: the last H mod s iterations
-        carry, objs_tail = group(carry, jnp.asarray(K * s), rem)
+        carry, objs_tail = group(carry, jnp.asarray(start + K * s), rem)
         objs = jnp.concatenate([objs, objs_tail])
     return carry, objs
 

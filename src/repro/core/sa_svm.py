@@ -40,15 +40,16 @@ from repro.core.sa_lasso import _gram_and_proj, _reduce_gram_proj
 from repro.core.sa_loop import grouped_impl_label, run_grouped
 from repro.core.sparse_exec import (prep_operand, row_block_ops,
                                     spmm_aux)
-from repro.core.types import (SVMProblem, SolverConfig, SolverResult,
-                              SparseOperand, operand_rmatvec,
-                              require_unit_block)
+from repro.core.types import (SVMProblem, SolveState, SolverConfig,
+                              SolverResult, SparseOperand, operand_rmatvec,
+                              require_unit_block, resume_carry)
 from repro.kernels.svm_inner import inner_impl, svm_inner_loop
 
 
 def sa_bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
                 axis_name: Optional[object] = None,
-                alpha0=None) -> SolverResult:
+                alpha0=None, state: Optional[SolveState] = None
+                ) -> SolverResult:
     """s-step unrolled BDCD: identical iterates to ``bdcd_svm`` in exact
     arithmetic, ONE Allreduce per s inner iterations."""
     A = prep_operand(problem.A, cfg.dtype)
@@ -61,15 +62,24 @@ def sa_bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
     gamma_f, nu_f = float(problem.gamma), float(problem.nu)
     key = jax.random.key(cfg.seed)
     s, H = cfg.s, cfg.iterations
+    carry0 = resume_carry(state, alpha0, "sa_bdcd_svm")
+    h0 = 0 if state is None else int(state.iteration)
 
-    alpha = jnp.zeros((m,), cfg.dtype) if alpha0 is None \
-        else jnp.asarray(alpha0, cfg.dtype)
-    x = operand_rmatvec(A, b * alpha)                     # line 2 (local)
-    # warm start: resume incremental dual tracking from f_D(alpha0), as in
-    # ``bdcd_svm``, reusing the x just built (zero-start: no communication).
-    dual0 = jnp.asarray(0.0, cfg.dtype) if alpha0 is None else (
-        0.5 * linalg.preduce(jnp.sum(x * x), axis_name)
-        + 0.5 * gamma * jnp.sum(alpha * alpha) - jnp.sum(alpha))
+    if carry0 is not None:
+        # resume: carry restored verbatim (no matvec / Allreduce rebuild)
+        alpha = jnp.asarray(carry0["alpha"], cfg.dtype)
+        x = jnp.asarray(carry0["x"], cfg.dtype)
+        dual0 = jnp.asarray(carry0["dual"], cfg.dtype)
+    else:
+        alpha = jnp.zeros((m,), cfg.dtype) if alpha0 is None \
+            else jnp.asarray(alpha0, cfg.dtype)
+        x = operand_rmatvec(A, b * alpha)                 # line 2 (local)
+        # warm start: resume incremental dual tracking from f_D(alpha0), as
+        # in ``bdcd_svm``, reusing the x just built (zero-start: no
+        # communication).
+        dual0 = jnp.asarray(0.0, cfg.dtype) if alpha0 is None else (
+            0.5 * linalg.preduce(jnp.sum(x * x), axis_name)
+            + 0.5 * gamma * jnp.sum(alpha * alpha) - jnp.sum(alpha))
 
     def group(carry, start, s_grp):
         """One outer group of s_grp block updates; ``start`` is the
@@ -112,9 +122,12 @@ def sa_bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
         return (alpha, x, dual), objs
 
     (alpha, x, dual), objs = run_grouped(group, (alpha, x, dual0), H, s,
-                                         cfg.dtype)
+                                         cfg.dtype, start=h0)
     return SolverResult(x=x, objective=objs,
                         aux={"alpha": alpha, "dual": dual,
+                             "state": SolveState(
+                                 h0 + H,
+                                 {"alpha": alpha, "x": x, "dual": dual}),
                              "inner_impl": grouped_impl_label(
                                  inner_impl, H, s, mu, cfg.use_pallas,
                                  jnp.dtype(cfg.dtype).itemsize),
@@ -124,8 +137,8 @@ def sa_bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
 
 def sa_svm(problem: SVMProblem, cfg: SolverConfig,
            axis_name: Optional[object] = None,
-           alpha0=None) -> SolverResult:
+           alpha0=None, state: Optional[SolveState] = None) -> SolverResult:
     """Paper Algorithm 4: the block_size = 1 special case of
     ``sa_bdcd_svm``."""
     require_unit_block(cfg, "sa_svm")
-    return sa_bdcd_svm(problem, cfg, axis_name, alpha0)
+    return sa_bdcd_svm(problem, cfg, axis_name, alpha0, state)

@@ -31,9 +31,10 @@ import jax.numpy as jnp
 
 from repro.core import cost_model, linalg
 from repro.core.sparse_exec import prep_operand, row_block_ops, spmm_aux
-from repro.core.types import (SVMProblem, SolverConfig, SolverResult,
-                              operand_matvec, operand_rmatvec,
-                              register_family, require_unit_block)
+from repro.core.types import (SVMProblem, SolveState, SolverConfig,
+                              SolverResult, operand_matvec, operand_rmatvec,
+                              register_family, require_unit_block,
+                              resume_carry)
 
 
 def primal_objective(problem: SVMProblem, x, axis_name: Optional[object] = None):
@@ -66,7 +67,7 @@ def duality_gap(problem: SVMProblem, x, alpha,
 
 def bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
              axis_name: Optional[object] = None,
-             alpha0=None) -> SolverResult:
+             alpha0=None, state: Optional[SolveState] = None) -> SolverResult:
     """Block dual coordinate descent (BDCD) for linear SVM.
 
     Paper Algorithm 3 generalized to block updates of mu = cfg.block_size
@@ -96,17 +97,28 @@ def bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
     gamma = jnp.asarray(problem.gamma, cfg.dtype)
     nu = jnp.asarray(problem.nu, cfg.dtype)
     key = jax.random.key(cfg.seed)
+    carry0 = resume_carry(state, alpha0, "bdcd_svm")
+    start = 0 if state is None else int(state.iteration)
 
-    alpha = jnp.zeros((m,), cfg.dtype) if alpha0 is None \
-        else jnp.asarray(alpha0, cfg.dtype)
-    x = operand_rmatvec(A, b * alpha)                    # line 2 (local shard)
-    # incremental tracking resumes from f_D(alpha0) on warm start (zero at
-    # alpha0 = 0 without any communication), so a warm-started solve's
-    # objective trace continues the previous solve's. Reuses the x we just
-    # built: f_D(alpha) = 1/2 ||A^T(b a)||^2 + gamma/2 ||a||^2 - e^T a.
-    dual0 = jnp.asarray(0.0, cfg.dtype) if alpha0 is None else (
-        0.5 * linalg.preduce(jnp.sum(x * x), axis_name)
-        + 0.5 * gamma * jnp.sum(alpha * alpha) - jnp.sum(alpha))
+    if carry0 is not None:
+        # resume: alpha, the primal shard x AND the running dual come
+        # back from the checkpoint — no matvec, no Allreduce, so the
+        # resumed sequence is bit-identical to the uninterrupted one.
+        alpha = jnp.asarray(carry0["alpha"], cfg.dtype)
+        x = jnp.asarray(carry0["x"], cfg.dtype)
+        dual0 = jnp.asarray(carry0["dual"], cfg.dtype)
+    else:
+        alpha = jnp.zeros((m,), cfg.dtype) if alpha0 is None \
+            else jnp.asarray(alpha0, cfg.dtype)
+        x = operand_rmatvec(A, b * alpha)                # line 2 (local shard)
+        # incremental tracking resumes from f_D(alpha0) on warm start (zero
+        # at alpha0 = 0 without any communication), so a warm-started
+        # solve's objective trace continues the previous solve's. Reuses
+        # the x we just built:
+        # f_D(alpha) = 1/2 ||A^T(b a)||^2 + gamma/2 ||a||^2 - e^T a.
+        dual0 = jnp.asarray(0.0, cfg.dtype) if alpha0 is None else (
+            0.5 * linalg.preduce(jnp.sum(x * x), axis_name)
+            + 0.5 * gamma * jnp.sum(alpha * alpha) - jnp.sum(alpha))
     eye_mu = jnp.eye(mu, dtype=cfg.dtype)
 
     def step(carry, h):
@@ -136,18 +148,22 @@ def bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
         return (alpha, x, dual), obj
 
     (alpha, x, dual), objs = jax.lax.scan(
-        step, (alpha, x, dual0), jnp.arange(1, cfg.iterations + 1))
+        step, (alpha, x, dual0),
+        jnp.arange(start + 1, start + cfg.iterations + 1))
     return SolverResult(x=x, objective=objs,
                         aux={"alpha": alpha, "dual": dual,
+                             "state": SolveState(
+                                 start + cfg.iterations,
+                                 {"alpha": alpha, "x": x, "dual": dual}),
                              **spmm_aux(A, cfg, "row_gram", extra=1)})
 
 
 def dcd_svm(problem: SVMProblem, cfg: SolverConfig,
             axis_name: Optional[object] = None,
-            alpha0=None) -> SolverResult:
+            alpha0=None, state: Optional[SolveState] = None) -> SolverResult:
     """Paper Algorithm 3: the block_size = 1 special case of ``bdcd_svm``."""
     require_unit_block(cfg, "dcd_svm")
-    return bdcd_svm(problem, cfg, axis_name, alpha0)
+    return bdcd_svm(problem, cfg, axis_name, alpha0, state)
 
 
 def _cli_kernel(args) -> str:
@@ -195,10 +211,12 @@ def _cli_describe(args, res, elapsed: float) -> str:
     bench_block_size=1,
     bench_problem_kwargs={"lam": 1.0},
     supports_symmetric_gram=True,
+    state_layout=lambda cfg: (("alpha", "replicated"), ("x", "partition"),
+                              ("dual", "replicated")),
 )
 def solve_svm(problem: SVMProblem, cfg: SolverConfig,
               axis_name: Optional[object] = None,
-              x0=None) -> SolverResult:
+              x0=None, state=None) -> SolverResult:
     """Dispatch on (problem.kernel, cfg.s).
 
     Linear problems keep the primal-shadowing (SA-)BDCD solvers with
@@ -211,8 +229,8 @@ def solve_svm(problem: SVMProblem, cfg: SolverConfig,
     """
     if getattr(problem, "kernel", "linear") != "linear":
         from repro.core.kernel_svm import solve_ksvm
-        return solve_ksvm(problem, cfg, axis_name, x0)
+        return solve_ksvm(problem, cfg, axis_name, x0, state)
     if cfg.s > 1:
         from repro.core.sa_svm import sa_bdcd_svm
-        return sa_bdcd_svm(problem, cfg, axis_name, x0)
-    return bdcd_svm(problem, cfg, axis_name, x0)
+        return sa_bdcd_svm(problem, cfg, axis_name, x0, state)
+    return bdcd_svm(problem, cfg, axis_name, x0, state)

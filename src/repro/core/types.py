@@ -491,6 +491,17 @@ class ProblemFamily:
                 ``cfg.symmetric_gram`` (triangle-packed Gram Allreduce)
                 — the tuner only recommends it where it changes the
                 executed message.
+    state_layout: checkpoint layout hook
+                ``fn(cfg) -> ((leaf_name, layout), ...)`` naming the
+                recurrence leaves the variant selected by ``cfg``
+                carries across outer-iteration boundaries, in the order
+                solvers emit them in ``SolverResult.aux["state"]``.
+                layout is "replicated" or "partition" (along the
+                family's partition axis), exactly the ``x0_layout``
+                vocabulary — the sharded driver pads/shards/unpads
+                state leaves from this declaration, and the elastic
+                checkpointer derives each leaf's logical PartitionSpec
+                from it.
     """
 
     name: str
@@ -514,6 +525,7 @@ class ProblemFamily:
         default_factory=lambda: {"s": (1, 2, 4, 8, 16, 32, 64),
                                  "mu": (1, 2, 4, 8, 16)})
     supports_symmetric_gram: bool = False
+    state_layout: Optional[Callable] = None
 
     def __post_init__(self):
         if self.partition not in ("row", "col"):
@@ -559,6 +571,50 @@ def register_family(name: str, **fields):
         return fn
 
     return deco
+
+
+@dataclasses.dataclass
+class SolveState:
+    """Full solver state at an outer-iteration boundary.
+
+    The SA solvers keep s iterations of recurrences in flight between
+    Allreduces; the ONLY points where the complete algorithm state is a
+    small set of named vectors are the outer-iteration boundaries (after
+    the deferred updates of a group land, before the next group's fused
+    Allreduce). A ``SolveState`` captures exactly that cut:
+
+    iteration: global INNER iterations completed (a host int — it offsets
+        the ``fold_in`` RNG iteration ids and the theta-schedule index,
+        so a resumed solve draws the same blocks and acceleration
+        scalars as the uninterrupted one; the RNG key itself is
+        reconstructed from ``cfg.seed``, which the elastic checkpoint
+        manifest records).
+    carry: the named recurrence leaves, in the family's
+        ``state_layout(cfg)`` order. Leaves are LOGICAL (unpadded,
+        replicated-or-partition per the declared layout), so a state
+        saved on one mesh restores onto any other — the sharded driver
+        re-pads and re-shards them from the layout alone.
+
+    Every solver returns its final state in ``SolverResult.aux["state"]``
+    and accepts one back via ``state=`` (mutually exclusive with ``x0``).
+    """
+
+    iteration: int
+    carry: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def resume_carry(state: Optional["SolveState"], x0, solver_name: str):
+    """Shared precondition for the solvers' resume path: ``state`` and
+    ``x0`` are mutually exclusive (a state IS the warm start — seeding
+    x0 on top of it would silently discard the restored recurrences).
+    Returns ``state.carry`` or None."""
+    if state is None:
+        return None
+    if x0 is not None:
+        raise ValueError(
+            f"{solver_name}: pass either x0= (fresh warm start) or "
+            f"state= (resume a checkpointed solve), not both")
+    return state.carry
 
 
 def require_unit_block(cfg: "SolverConfig", solver_name: str) -> None:

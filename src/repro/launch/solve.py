@@ -69,8 +69,46 @@ def build_parser() -> argparse.ArgumentParser:
                          "the calibrated cost model (repro.tune) before "
                          "solving; --s/--mu become the incumbent the "
                          "tuner must beat")
+    # elastic fault-tolerant execution (repro.runtime.solve_elastic):
+    # --checkpoint-every switches from the plain local solve to the
+    # sharded elastic driver with periodic outer-boundary checkpoints.
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="checkpoint directory for the elastic sharded "
+                         "driver (implies --checkpoint-every 1 if that "
+                         "flag is unset)")
+    ap.add_argument("--checkpoint-every", type=int, default=None,
+                    help="checkpoint every N OUTER iterations and run "
+                         "through the elastic sharded driver (survives "
+                         "injected host failures)")
+    ap.add_argument("--inject-failure", action="append", default=[],
+                    metavar="STEP:HOST",
+                    help="kill HOST at inner iteration STEP (repeatable); "
+                         "requires the elastic driver "
+                         "(--checkpoint-every/--checkpoint-dir)")
     ap.add_argument("--seed", type=int, default=0)
     return ap
+
+
+def _elastic_kwargs(args):
+    """Parse the elastic CLI flags into solve_elastic kwargs, or None
+    when the plain local path should run."""
+    if (args.checkpoint_dir is None and args.checkpoint_every is None
+            and not args.inject_failure):
+        return None
+    from repro.runtime import ElasticConfig, FailureInjector
+    if args.checkpoint_dir is None:
+        import tempfile
+        args.checkpoint_dir = tempfile.mkdtemp(prefix="repro_elastic_")
+    failures = {}
+    for spec in args.inject_failure:
+        step_s, host_s = spec.split(":")
+        failures.setdefault(int(step_s), []).append(int(host_s))
+    return {
+        "elastic": ElasticConfig(
+            checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=args.checkpoint_every or 1),
+        "injector": FailureInjector(failures=failures) if failures else None,
+    }
 
 
 def main(argv=None):
@@ -100,7 +138,14 @@ def main(argv=None):
               f"{tr.predicted_default_s:.3g}s"
               f"{', cached machine' if tr.from_cache else ''})")
         args.s, args.mu = cfg.s, cfg.block_size   # describe() reads these
-    res = api.solve(problem, cfg, family=family.name)
+    ekw = _elastic_kwargs(args)
+    if ekw is None:
+        res = api.solve(problem, cfg, family=family.name)
+    else:
+        from repro.runtime import solve_elastic
+        res = solve_elastic(problem, cfg, family=family.name, **ekw)
+        for ev in res.aux["elastic"]["events"]:
+            print(f"elastic: {ev}")
     print(family.describe(args, res, time.perf_counter() - t0))
 
 

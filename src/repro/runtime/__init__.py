@@ -1,3 +1,4 @@
 from repro.runtime.driver import Trainer, TrainerConfig
+from repro.runtime.elastic import ElasticConfig, build_1d_mesh, solve_elastic
 from repro.runtime.failures import FailureInjector
 from repro.runtime.stragglers import StragglerMonitor

@@ -1,0 +1,263 @@
+"""Elastic fault-tolerant sharded solves: checkpoint / failure / re-mesh
+orchestration around ``repro.core.api.solve_sharded``.
+
+The SA solvers keep s iterations of recurrences in flight between fused
+Allreduces, so the ONLY safe checkpoint points are outer-iteration
+boundaries (DESIGN.md "Elastic recovery of SA recurrences"). This driver
+runs a solve as a sequence of SEGMENTS of ``checkpoint_every`` outer
+iterations, each one ``solve_sharded`` call; at every boundary the full
+logical :class:`~repro.core.types.SolveState` (recurrence carries + the
+global inner-iteration index; the RNG key and θ schedule are
+reconstructed from ``cfg.seed``/``cfg``) is checkpointed with
+mesh-agnostic PartitionSpecs derived from the family's ``state_layout``.
+
+Failure model (single-process simulation, faithful to the multi-host
+code path): each "host" owns one device of the original device list.
+When the :class:`~repro.runtime.failures.FailureInjector` schedules a
+failure at an inner iteration inside the upcoming segment, that
+segment's in-flight work is LOST (exactly what s steps of unsynchronized
+recurrences mean), the dead hosts' devices are removed, a smaller 1D
+mesh is rebuilt over the survivors, and the latest checkpoint is
+restored onto it — ``solve_sharded`` re-pads and re-shards the logical
+state through the generic pad/unpad machinery, so no resharding code
+exists here. A failure before the first checkpoint restarts from the
+initial state. Replay is safe because ``FailureInjector.check`` pops:
+a fired failure never fires again.
+
+Straggler policy: after each segment the
+:class:`~repro.runtime.stragglers.StragglerMonitor` is fed per-host
+times (measured, or simulated via the ``host_times`` hook). "rebalance"
+is ADVISORY here — the equal-shard ``shard_map`` layout has no per-host
+mu share to shrink, so the suggested ``microbatch_weights`` are surfaced
+in the report for a weighted-sharding driver to consume. "evict" is
+ENFORCED: the host is dropped through the same re-mesh path as a hard
+failure (restoring the checkpoint just written at the boundary, so no
+work is lost).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.core import api as core_api
+from repro.core.types import SolveState, SolverConfig, SolverResult
+from repro.runtime.failures import FailureInjector
+from repro.runtime.stragglers import StragglerMonitor
+
+__all__ = ["ElasticConfig", "solve_elastic", "build_1d_mesh"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticConfig:
+    """Knobs for :func:`solve_elastic`.
+
+    checkpoint_dir:   where ``step_<inner_iteration>`` checkpoints land.
+    checkpoint_every: segment length in OUTER iterations (Allreduce
+                      rounds) — the checkpoint cadence. Segment
+                      boundaries fall at multiples of ``cfg.s`` inner
+                      iterations, preserving s-group alignment, so an
+                      undisturbed segmented solve is bit-identical to
+                      the monolithic one on the same mesh.
+    keep:             checkpoint retention (newest N kept).
+    async_save:       overlap npz writes with the next segment (joined
+                      before any restore and on exit).
+    """
+
+    checkpoint_dir: str = "/tmp/repro_elastic_ckpt"
+    checkpoint_every: int = 1
+    keep: int = 3
+    async_save: bool = True
+
+    def __post_init__(self):
+        if self.checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1 outer iterations, "
+                f"got {self.checkpoint_every}")
+        if self.keep < 1:
+            raise ValueError(f"keep must be >= 1, got {self.keep}")
+
+
+def build_1d_mesh(devices: List, axis: str) -> Mesh:
+    """A 1D mesh over ``devices`` named ``axis`` (the family's default
+    sharded axis)."""
+    return Mesh(np.array(devices), (axis,))
+
+
+def _state_specs(layout, axis: str) -> Dict[str, P]:
+    """Logical PartitionSpec per state leaf: 'partition' leaves shard on
+    the family's mesh axis, 'replicated' leaves on no axis — exactly the
+    vocabulary ``ckpt.py`` stores mesh-agnostically."""
+    return {name: (P(axis) if lay == "partition" else P())
+            for name, lay in layout}
+
+
+def solve_elastic(problem, cfg: Optional[SolverConfig] = None, *,
+                  elastic: Optional[ElasticConfig] = None,
+                  family: Optional[object] = None,
+                  devices: Optional[List] = None,
+                  injector: Optional[FailureInjector] = None,
+                  monitor: Optional[StragglerMonitor] = None,
+                  host_times: Optional[Callable[[int, List[int]],
+                                               Dict[int, float]]] = None,
+                  x0=None) -> SolverResult:
+    """Sharded solve that survives host failures mid-run.
+
+    problem/cfg/family/x0: as :func:`repro.core.api.solve`.
+    elastic:   checkpoint cadence/retention (:class:`ElasticConfig`).
+    devices:   the initial device list; each entry is one simulated
+               "host" (defaults to ``jax.devices()``).
+    injector:  scheduled failures keyed by GLOBAL inner iteration — a
+               failure at iteration t kills its hosts mid-segment and
+               loses that segment's in-flight work.
+    monitor:   straggler monitor; fed after every segment when
+               ``host_times`` is given.
+    host_times: ``fn(segment_index, live_hosts) -> {host: seconds}`` —
+               simulated (or externally measured) per-host step times.
+               Without it the monitor is fed the measured wall time for
+               every live host (no skew — detection never triggers).
+
+    Returns the final :class:`SolverResult`; ``aux["elastic"]`` holds
+    the event log, per-recovery timings, the advisory rebalance weights,
+    and the surviving host list. The objective trace covers all
+    cfg.iterations inner iterations — replayed segments overwrite the
+    work lost to each failure, exactly as the uninterrupted trace would
+    read.
+    """
+    fam = core_api.resolve_family(problem, family)
+    if cfg is None:
+        cfg = SolverConfig()
+    if elastic is None:
+        elastic = ElasticConfig()
+    if fam.state_layout is None:
+        raise ValueError(
+            f"family {fam.name!r} declares no state_layout — elastic "
+            f"recovery needs checkpointable solver state")
+    axis = fam.default_axes if isinstance(fam.default_axes, str) else "data"
+    layout = fam.state_layout(cfg)
+    specs = _state_specs(layout, axis)
+
+    all_devices = list(devices if devices is not None else jax.devices())
+    live = list(range(len(all_devices)))          # host ids = device index
+    seg_len = elastic.checkpoint_every * cfg.s    # inner iters per segment
+
+    events: List[str] = []
+    recoveries: List[Dict[str, Any]] = []
+    rebalances: List[Dict[str, Any]] = []
+    traces: List[Dict[str, Any]] = []             # {"start": it, "objs": arr}
+    state: Optional[SolveState] = None
+    seg_index = 0
+
+    def rebuild_mesh():
+        return build_1d_mesh([all_devices[h] for h in live], axis)
+
+    def restore(mgr: CheckpointManager, reason: str):
+        """Latest checkpoint -> (state, iteration); falls back to the
+        initial state when nothing was checkpointed yet."""
+        nonlocal state, traces
+        t0 = time.perf_counter()
+        try:
+            tree, extra = mgr.restore_latest()
+        except FileNotFoundError:
+            state, it = None, 0
+            traces = []
+            events.append(f"{reason}: no checkpoint yet — restarting "
+                          f"from the initial state")
+        else:
+            it = int(extra["iteration"])
+            state = SolveState(it, dict(tree))
+            traces = [t for t in traces if t["start"] < it]
+            events.append(f"{reason}: restored iteration {it} onto "
+                          f"{len(live)} hosts")
+        return it, time.perf_counter() - t0
+
+    with CheckpointManager(elastic.checkpoint_dir, keep=elastic.keep,
+                           async_save=elastic.async_save) as mgr:
+        mesh = rebuild_mesh()
+        it = 0
+        while it < cfg.iterations:
+            if injector is not None:
+                dead = sorted({h for t in range(it + 1, it + seg_len + 1)
+                               for h in injector.check(t)
+                               if h in live})
+                if dead:
+                    for h in dead:
+                        live.remove(h)
+                        if monitor is not None:
+                            monitor.drop_host(h)
+                    if not live:
+                        raise RuntimeError("all hosts lost")
+                    events.append(
+                        f"hosts {dead} failed in segment after iteration "
+                        f"{it} — segment work lost")
+                    mgr.wait()
+                    it, dt = restore(mgr, f"failure of hosts {dead}")
+                    mesh = rebuild_mesh()
+                    recoveries.append({
+                        "kind": "failure", "hosts": dead,
+                        "resumed_iteration": it, "n_hosts": len(live),
+                        "restore_seconds": dt})
+                    continue
+
+            H_seg = min(seg_len, cfg.iterations - it)
+            cfg_seg = dataclasses.replace(cfg, iterations=H_seg)
+            t0 = time.perf_counter()
+            res = core_api.solve_sharded(
+                problem, cfg_seg, mesh, axes=axis, family=fam,
+                x0=x0 if (it == 0 and state is None) else None,
+                state=state)
+            jax.block_until_ready(res.x)
+            seg_seconds = time.perf_counter() - t0
+            state = res.aux["state"]
+            traces.append({"start": it,
+                           "objs": np.asarray(res.objective)})
+            it = int(state.iteration)
+            mgr.save(it, dict(state.carry), specs,
+                     extra={"iteration": it, "family": fam.name,
+                            "seed": cfg.seed, "s": cfg.s,
+                            "accelerated": cfg.accelerated,
+                            "n_hosts": len(live)})
+            seg_index += 1
+
+            if monitor is not None:
+                times = (host_times(seg_index - 1, list(live))
+                         if host_times is not None
+                         else {h: seg_seconds for h in live})
+                actions = monitor.record(times)
+                evict = sorted(h for h, a in actions.items()
+                               if a == "evict" and h in live)
+                if evict and len(evict) < len(live):
+                    for h in evict:
+                        live.remove(h)
+                        monitor.drop_host(h)
+                    events.append(
+                        f"hosts {evict} evicted as stragglers after "
+                        f"iteration {it}")
+                    it, dt = restore(mgr, f"eviction of hosts {evict}")
+                    mesh = rebuild_mesh()
+                    recoveries.append({
+                        "kind": "evict", "hosts": evict,
+                        "resumed_iteration": it, "n_hosts": len(live),
+                        "restore_seconds": dt})
+                elif any(a == "rebalance" for a in actions.values()):
+                    rebalances.append({
+                        "iteration": it,
+                        "hosts": sorted(h for h, a in actions.items()
+                                        if a == "rebalance"),
+                        "microbatch_weights": monitor.microbatch_weights()})
+
+    objective = np.concatenate([t["objs"] for t in traces]) if traces \
+        else np.zeros((0,))
+    res.aux["state"] = state
+    res.aux["elastic"] = {
+        "events": events, "recoveries": recoveries,
+        "rebalances": rebalances, "live_hosts": list(live),
+        "n_hosts_initial": len(all_devices),
+        "checkpoint_every": elastic.checkpoint_every,
+    }
+    return SolverResult(x=res.x, objective=objective, aux=res.aux)

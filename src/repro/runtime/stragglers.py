@@ -16,7 +16,7 @@ is centralized and cheap; mitigation reuses the failure machinery.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set
 
 
 @dataclasses.dataclass
@@ -28,12 +28,34 @@ class StragglerMonitor:
     evict_after: int = 8
 
     def __post_init__(self):
+        if self.n_hosts < 1:
+            raise ValueError(f"n_hosts must be >= 1, got {self.n_hosts}")
+        if not 0.0 < self.ema_decay < 1.0:
+            raise ValueError(
+                f"ema_decay must be in (0, 1), got {self.ema_decay}")
+        if self.threshold < 1.0:
+            raise ValueError(
+                f"threshold must be >= 1 (a host slower than the median "
+                f"by less than 1x is not a straggler), got {self.threshold}")
+        if self.patience < 1:
+            raise ValueError(f"patience must be >= 1, got {self.patience}")
+        if self.evict_after < self.patience:
+            raise ValueError(
+                f"evict_after ({self.evict_after}) must be >= patience "
+                f"({self.patience}): rebalance escalates INTO evict, "
+                f"never the other way")
         self._ema: List[Optional[float]] = [None] * self.n_hosts
         self._strikes: List[int] = [0] * self.n_hosts
+        self._dropped: Set[int] = set()
 
     def record(self, host_times: Dict[int, float]) -> Dict[int, str]:
-        """Feed one step's per-host times; returns {host: action}."""
+        """Feed one step's per-host times; returns {host: action}.
+        Times reported for a dropped host (a late heartbeat racing its
+        eviction) are ignored — a dropped host never reappears in the
+        EMA table or the returned actions."""
         for h, t in host_times.items():
+            if h in self._dropped:
+                continue
             prev = self._ema[h]
             self._ema[h] = t if prev is None \
                 else self.ema_decay * prev + (1 - self.ema_decay) * t
@@ -56,8 +78,14 @@ class StragglerMonitor:
         return actions
 
     def drop_host(self, host: int):
+        self._dropped.add(host)
         self._ema[host] = None
         self._strikes[host] = 0
+
+    @property
+    def live_hosts(self) -> List[int]:
+        """Hosts never dropped (tracked or not yet heard from)."""
+        return [h for h in range(self.n_hosts) if h not in self._dropped]
 
     def microbatch_weights(self) -> List[float]:
         """Per-host work shares inversely proportional to EMA step time

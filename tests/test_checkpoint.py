@@ -64,3 +64,64 @@ def test_atomicity_no_partial_dirs(tmp_path):
 def test_restore_missing_raises(tmp_path):
     with pytest.raises(FileNotFoundError):
         restore_checkpoint(str(tmp_path))
+
+
+def test_partial_step_dir_skipped(tmp_path):
+    """A ``step_<N>`` directory without a manifest (a crash mid-copy, or
+    a foreign tool's leftovers) must be invisible to latest_step /
+    restore-latest — they land on the newest COMPLETE checkpoint."""
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 3, tree, extra={"iteration": 3})
+    os.makedirs(tmp_path / "step_00000009")      # partial: no manifest
+    assert latest_step(str(tmp_path)) == 3
+    restored, extra = restore_checkpoint(str(tmp_path), tree_like=tree)
+    assert extra["iteration"] == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+
+
+def test_only_partial_dirs_means_no_checkpoint(tmp_path):
+    os.makedirs(tmp_path / "step_00000001")
+    assert latest_step(str(tmp_path)) is None
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path))
+
+
+def test_close_joins_outstanding_async_save(tmp_path, monkeypatch):
+    """Regression for the async-save thread lifecycle: close() (and the
+    context-manager exit) must JOIN the in-flight save, not abandon a
+    daemon thread mid-``np.savez``. A deliberately slowed save is still
+    fully on disk after the with-block."""
+    import threading
+    import time as _time
+
+    from repro.checkpoint import ckpt as ckpt_mod
+
+    real_save = ckpt_mod.save_checkpoint
+    started = threading.Event()
+
+    def slow_save(*args, **kwargs):
+        started.set()
+        _time.sleep(0.3)
+        return real_save(*args, **kwargs)
+
+    monkeypatch.setattr(ckpt_mod, "save_checkpoint", slow_save)
+    tree = _tree()
+    with CheckpointManager(str(tmp_path), async_save=True) as mgr:
+        mgr.save(4, tree, extra={"iteration": 4})
+        assert started.wait(timeout=5.0)
+        # exiting the with-block blocks on the slow thread
+    assert mgr._thread is None
+    assert latest_step(str(tmp_path)) == 4
+    restored, extra = restore_checkpoint(str(tmp_path), tree_like=tree)
+    assert extra["iteration"] == 4
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    mgr.close()                                   # idempotent
+
+
+def test_sync_manager_needs_no_close(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, _tree())
+    assert mgr._thread is None
+    assert latest_step(str(tmp_path)) == 1

@@ -1,0 +1,177 @@
+"""Checkpoint round-trips of SA solver state, for every registered
+family x variant: save the :class:`SolveState` at an outer-iteration
+boundary through ``repro.checkpoint``, restore it, continue — the final
+iterate must be BIT-IDENTICAL to the uninterrupted solve (resume
+restores the recurrence carries verbatim; nothing is recomputed).
+
+The multi-device failure/re-mesh path lives in tests/test_chaos.py;
+everything here runs on the default single device."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.core.api import resolve_family
+from repro.core.types import (FAMILIES, LassoProblem, LogRegProblem,
+                              SVMProblem, SolveState, SolverConfig,
+                              SparseOperand)
+from repro.runtime.elastic import ElasticConfig
+
+_RNG = np.random.default_rng(11)
+_M, _N = 24, 40
+_A = _RNG.standard_normal((_M, _N)).astype(np.float32)
+_B = _RNG.standard_normal(_M).astype(np.float32)
+_SIGNS = np.sign(_RNG.standard_normal(_M)).astype(np.float32)
+_LAM = 0.1 * float(np.abs(_A.T @ _B).max())
+
+
+def _problem(family: str, sparse: bool = False):
+    A = SparseOperand.from_dense(_A) if sparse else jnp.asarray(_A)
+    if family == "lasso":
+        return LassoProblem(A=A, b=jnp.asarray(_B), lam=_LAM)
+    if family == "svm":
+        return SVMProblem(A=A, b=jnp.asarray(_SIGNS), lam=0.5)
+    if family == "ksvm":
+        return SVMProblem(A=A, b=jnp.asarray(_SIGNS), lam=0.5,
+                          kernel="rbf", kernel_params={"gamma": 0.3})
+    if family == "logreg":
+        return LogRegProblem(A=A, b=jnp.asarray(_SIGNS), lam=0.1)
+    raise AssertionError(family)
+
+
+# (family, s, accelerated): every registered family x variant. H=12 and
+# the h=6 cut are multiples of every s here, so the cut is always an
+# outer-iteration boundary.
+CASES = [
+    ("lasso", 1, False), ("lasso", 1, True),
+    ("lasso", 3, False), ("lasso", 3, True),
+    ("svm", 1, False), ("svm", 2, False),
+    ("ksvm", 1, False), ("ksvm", 2, False),
+    ("logreg", 1, False), ("logreg", 2, False),
+]
+
+
+def _cfg(family, s, accelerated, iterations):
+    return SolverConfig(block_size=4, s=s, iterations=iterations,
+                        accelerated=accelerated, dtype=jnp.float32)
+
+
+def _roundtrip_state(tmp_path, fam, cfg, state: SolveState) -> SolveState:
+    """State -> npz checkpoint on disk -> state, through the real
+    save/restore path with the family's logical specs."""
+    layout = fam.state_layout(cfg)
+    axis = fam.default_axes if isinstance(fam.default_axes, str) else "data"
+    specs = {name: (P(axis) if lay == "partition" else P())
+             for name, lay in layout}
+    save_checkpoint(str(tmp_path), state.iteration, dict(state.carry),
+                    specs=specs, extra={"iteration": state.iteration})
+    tree, extra = restore_checkpoint(str(tmp_path))
+    return SolveState(int(extra["iteration"]), dict(tree))
+
+
+@pytest.mark.parametrize("family,s,accelerated", CASES)
+def test_checkpoint_roundtrip_bit_identical(tmp_path, family, s,
+                                            accelerated):
+    fam = FAMILIES[family]
+    prob = _problem(family)
+    full = fam.solve(prob, _cfg(family, s, accelerated, 12))
+    half = fam.solve(prob, _cfg(family, s, accelerated, 6))
+    state = _roundtrip_state(tmp_path, fam,
+                             _cfg(family, s, accelerated, 6),
+                             half.aux["state"])
+    assert state.iteration == 6
+    resumed = fam.solve(prob, _cfg(family, s, accelerated, 6),
+                        state=state)
+    np.testing.assert_array_equal(np.asarray(resumed.x),
+                                  np.asarray(full.x))
+    assert resumed.aux["state"].iteration == 12
+    # the stitched objective trace matches the uninterrupted one exactly
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(half.objective),
+                        np.asarray(resumed.objective)]),
+        np.asarray(full.objective))
+
+
+@pytest.mark.parametrize("family,s", [("lasso", 3), ("logreg", 2)])
+def test_checkpoint_roundtrip_sparse_operand(tmp_path, family, s):
+    """Resume works when A is a SparseOperand: the checkpointed state
+    only holds vectors, so the operand's format is irrelevant to the
+    round-trip — but the resumed solve must still run the sparse path
+    and stay bit-identical."""
+    fam = FAMILIES[family]
+    prob = _problem(family, sparse=True)
+    cfg6 = _cfg(family, s, False, 6)
+    full = fam.solve(prob, _cfg(family, s, False, 12))
+    half = fam.solve(prob, cfg6)
+    state = _roundtrip_state(tmp_path, fam, cfg6, half.aux["state"])
+    resumed = fam.solve(prob, cfg6, state=state)
+    np.testing.assert_array_equal(np.asarray(resumed.x),
+                                  np.asarray(full.x))
+
+
+def test_state_and_x0_mutually_exclusive():
+    fam = FAMILIES["lasso"]
+    prob = _problem("lasso")
+    cfg = _cfg("lasso", 1, False, 4)
+    state = fam.solve(prob, cfg).aux["state"]
+    with pytest.raises(ValueError, match="x0"):
+        fam.solve(prob, cfg, x0=jnp.zeros(_N), state=state)
+
+
+def test_state_layout_covers_carry_for_every_family():
+    """The layout hook is the checkpoint schema: every leaf the solver
+    emits in its SolveState carry must have a declared placement, and
+    vice versa — a drifting carry would otherwise checkpoint partially
+    and explode only at restore time."""
+    for family, s, accelerated in CASES:
+        fam = FAMILIES[family]
+        cfg = _cfg(family, s, accelerated, max(s, 2) * 2)
+        res = fam.solve(_problem(family), cfg)
+        carry_keys = set(res.aux["state"].carry)
+        layout_keys = {name for name, _ in fam.state_layout(cfg)}
+        assert carry_keys == layout_keys, (family, s, accelerated)
+        assert all(lay in ("replicated", "partition")
+                   for _, lay in fam.state_layout(cfg))
+
+
+def test_elastic_config_validation():
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        ElasticConfig(checkpoint_every=0)
+    with pytest.raises(ValueError, match="keep"):
+        ElasticConfig(keep=0)
+
+
+def test_solve_elastic_single_device_matches_local(tmp_path):
+    """The elastic driver on a 1-device mesh with no failures equals the
+    plain local solve bit-for-bit (segmentation at outer boundaries is
+    exact, not approximate)."""
+    from repro.runtime import solve_elastic
+    fam = FAMILIES["lasso"]
+    prob = _problem("lasso")
+    cfg = dataclasses.replace(_cfg("lasso", 3, False, 12),
+                              track_objective=True)
+    ref = fam.solve(prob, cfg)
+    res = solve_elastic(prob, cfg, elastic=ElasticConfig(
+        checkpoint_dir=str(tmp_path), checkpoint_every=2))
+    np.testing.assert_array_equal(np.asarray(res.x), np.asarray(ref.x))
+    np.testing.assert_array_equal(np.asarray(res.objective),
+                                  np.asarray(ref.objective))
+    assert res.aux["elastic"]["recoveries"] == []
+
+
+def test_solve_elastic_all_hosts_lost_raises(tmp_path):
+    from repro.runtime import FailureInjector, solve_elastic
+    prob = _problem("lasso")
+    cfg = _cfg("lasso", 1, False, 4)
+    with pytest.raises(RuntimeError, match="all hosts lost"):
+        solve_elastic(prob, cfg,
+                      elastic=ElasticConfig(checkpoint_dir=str(tmp_path)),
+                      injector=FailureInjector(failures={2: [0]}))
+
+
+def test_resolve_family_state_layout_registered_everywhere():
+    for name, fam in FAMILIES.items():
+        assert fam.state_layout is not None, name

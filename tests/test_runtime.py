@@ -54,3 +54,202 @@ def test_drop_host():
     actions = mon.record({0: 1.0, 1: 1.0})
     assert actions == {}
     assert len(mon.microbatch_weights()) == 2
+
+
+# ---------------------------------------------------------------------
+# FailureInjector regressions: the pop semantics are what make
+# restore-and-replay safe in the elastic driver.
+
+def test_injector_fires_once_across_restore_and_replay():
+    """The elastic driver re-executes the iteration range [k, k+seg)
+    after restoring a checkpoint at k. A failure popped on the first
+    pass must NOT re-fire on the replay pass — otherwise every recovery
+    would kill another host forever."""
+    inj = FailureInjector(failures={3: [1], 5: [0, 2]})
+    first = [inj.check(t) for t in range(1, 7)]
+    assert first == [[], [], [1], [], [0, 2], []]
+    # replay the same window after a restore: nothing fires again
+    replay = [inj.check(t) for t in range(1, 7)]
+    assert replay == [[], [], [], [], [], []]
+
+
+def test_injector_fired_records_step_host_in_order():
+    inj = FailureInjector(failures={7: [3], 2: [0, 1]})
+    for t in range(1, 10):
+        inj.check(t)
+    assert inj.fired == [(2, 0), (2, 1), (7, 3)]
+
+
+def test_injector_unscheduled_steps_noop():
+    inj = FailureInjector(failures={})
+    assert inj.check(1) == []
+    assert inj.fired == []
+
+
+# ---------------------------------------------------------------------
+# StragglerMonitor invariants. Deterministic checks always run; the
+# hypothesis property sweeps run where hypothesis is installed (the CI
+# image may not ship it — importorskip, not a hard dependency).
+
+def test_monitor_validation():
+    with pytest.raises(ValueError, match="n_hosts"):
+        StragglerMonitor(n_hosts=0)
+    with pytest.raises(ValueError, match="ema_decay"):
+        StragglerMonitor(n_hosts=2, ema_decay=1.0)
+    with pytest.raises(ValueError, match="threshold"):
+        StragglerMonitor(n_hosts=2, threshold=0.5)
+    with pytest.raises(ValueError, match="patience"):
+        StragglerMonitor(n_hosts=2, patience=0)
+    with pytest.raises(ValueError, match="evict_after"):
+        StragglerMonitor(n_hosts=2, patience=3, evict_after=2)
+
+
+def test_strikes_reset_on_recovery_before_evict():
+    """A host whose EMA recovers under threshold x median resets its
+    strike count to ZERO — it must re-earn the full evict_after streak,
+    not resume the old count. (3 hosts so the median tracks the fast
+    pair; a low ema_decay so one fast step actually pulls the EMA back
+    under the threshold.)"""
+    mon = StragglerMonitor(n_hosts=3, ema_decay=0.1, threshold=1.5,
+                           patience=2, evict_after=4)
+    for _ in range(3):                      # 3 strikes, one short of evict
+        mon.record({0: 1.0, 1: 1.0, 2: 5.0})
+    mon.record({0: 1.0, 1: 1.0, 2: 1.0})    # EMA -> 1.4: strikes reset
+    for _ in range(3):        # 3 FRESH strikes: rebalance, NOT evict
+        actions = mon.record({0: 1.0, 1: 1.0, 2: 5.0})
+    assert actions.get(2) == "rebalance"    # without the reset: strike 6
+    actions = mon.record({0: 1.0, 1: 1.0, 2: 5.0})   # 4th fresh strike
+    assert actions.get(2) == "evict"
+
+
+def test_dropped_host_never_in_actions():
+    mon = StragglerMonitor(n_hosts=3, threshold=1.5, patience=1)
+    for _ in range(4):
+        mon.record({0: 1.0, 1: 1.0, 2: 9.0})
+    mon.drop_host(2)
+    # a late heartbeat for the dropped host races its eviction
+    actions = mon.record({0: 1.0, 1: 1.0, 2: 9.0})
+    assert 2 not in actions
+    assert mon.live_hosts == [0, 1]
+
+
+def test_single_live_host_median_well_defined():
+    """With one live host the median EMA is that host's own EMA, so it
+    can never exceed threshold x itself (threshold >= 1): a lone
+    survivor is structurally never a straggler."""
+    mon = StragglerMonitor(n_hosts=3, threshold=1.5, patience=1)
+    mon.drop_host(0)
+    mon.drop_host(1)
+    for _ in range(10):
+        actions = mon.record({2: 100.0})
+    assert actions == {}
+
+
+def test_rebalance_precedes_evict():
+    """Escalation order: the FIRST action a straggler receives is
+    rebalance (at patience strikes); evict only ever follows at
+    evict_after >= patience strikes."""
+    mon = StragglerMonitor(n_hosts=3, threshold=1.5, patience=2,
+                           evict_after=5)
+    seen = []
+    for _ in range(7):
+        seen.append(mon.record({0: 1.0, 1: 1.0, 2: 9.0}).get(2))
+    first_action = next(a for a in seen if a is not None)
+    assert first_action == "rebalance"
+    assert seen.index("evict") > seen.index("rebalance")
+
+
+# -- hypothesis property sweeps (skipped when hypothesis is absent; the
+# deterministic regressions above always run) ----
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):              # the undecorated test then skips
+        return lambda fn: fn
+
+    settings = given
+
+    class _St:                       # strategy placeholders, never drawn
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+    st = _St()
+
+needs_hypothesis = pytest.mark.skipif(
+    not _HAVE_HYPOTHESIS, reason="hypothesis not installed")
+
+_times = st.floats(min_value=0.01, max_value=100.0,
+                   allow_nan=False, allow_infinity=False)
+
+
+@needs_hypothesis
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.dictionaries(st.integers(0, 3), _times, min_size=1),
+                min_size=1, max_size=20),
+       st.integers(0, 3))
+def test_prop_dropped_host_never_returned(steps, victim):
+    mon = StragglerMonitor(n_hosts=4, threshold=1.5, patience=1,
+                           evict_after=2)
+    mon.drop_host(victim)
+    for times in steps:
+        actions = mon.record(times)
+        assert victim not in actions
+        assert victim not in mon.live_hosts
+
+
+@needs_hypothesis
+@settings(max_examples=50, deadline=None)
+@given(st.lists(_times, min_size=1, max_size=30))
+def test_prop_single_live_host_never_flagged(series):
+    mon = StragglerMonitor(n_hosts=1, threshold=1.5, patience=1)
+    for t in series:
+        assert mon.record({0: t}) == {}
+
+
+@needs_hypothesis
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=40),
+       st.integers(2, 4), st.integers(1, 4))
+def test_prop_rebalance_escalates_into_evict(slow_steps, patience, extra):
+    """For ANY slow/fast pattern: no action before `patience` records,
+    and with evict_after > patience every evict is PRECEDED by a
+    rebalance for the same host (strikes grow one per record, so the
+    streak must pass through [patience, evict_after) first). The
+    invariant is EMA-agnostic — it follows from the strike counter
+    alone, whatever the flagging pattern."""
+    evict_after = patience + extra
+    mon = StragglerMonitor(n_hosts=3, threshold=1.5, patience=patience,
+                           evict_after=evict_after)
+    seen = []
+    for i, slow in enumerate(slow_steps):
+        actions = mon.record({0: 1.0, 1: 1.0,
+                              2: 9.0 if slow else 1.0})
+        act = actions.get(2)
+        assert actions.get(0) is None and actions.get(1) is None
+        if act is not None:
+            assert i + 1 >= patience
+        seen.append(act)
+    for i, act in enumerate(seen):
+        if act == "evict":
+            assert "rebalance" in seen[:i]
+
+
+@needs_hypothesis
+@settings(max_examples=50, deadline=None)
+@given(st.dictionaries(st.integers(1, 30),
+                       st.lists(st.integers(0, 3), min_size=1,
+                                max_size=2, unique=True),
+                       min_size=0, max_size=5))
+def test_prop_injector_total_fire_count(failures):
+    """Sweeping check(t) over the full horizon twice fires every
+    scheduled (step, host) pair exactly once, in step-major order."""
+    inj = FailureInjector(failures={k: list(v)
+                                    for k, v in failures.items()})
+    for _ in range(2):
+        for t in range(1, 31):
+            inj.check(t)
+    expected = [(t, h) for t in sorted(failures) for h in failures[t]]
+    assert inj.fired == expected
