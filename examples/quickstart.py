@@ -11,7 +11,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro import api
-from repro.api import LassoProblem, LogRegProblem, SolverConfig
+from repro.api import (LassoProblem, LogRegProblem, SFISTAProblem,
+                       SolverConfig)
 from repro.core.cost_model import Machine, ProblemDims, best_s
 from repro.data.sparse import make_lasso_dataset, make_svm_dataset
 
@@ -55,7 +56,17 @@ def main():
     lo = np.asarray(lres.objective)
     print(f"logreg (SA, s=16): obj {lo[0]:.4f} -> {lo[-1]:.4f}")
 
-    # 5. when does SA win? The paper's Table I cost model:
+    # 5. families are engine programs (repro.core.engine): CA-SFISTA —
+    # sampled FISTA with subspace momentum, arXiv:1710.08883 — is ~150
+    # lines of algebra plugged into the generic s-step driver, and
+    # registration alone gives it this facade, the sharded driver,
+    # checkpointing and the autotuner. See DESIGN.md "The SA engine".
+    fres = api.solve(SFISTAProblem(A=A, b=b, lam=0.1 * lam_max),
+                     SolverConfig(block_size=8, iterations=128, s=16))
+    fo = np.asarray(fres.objective)
+    print(f"ca-sfista (s=16): obj {fo[0]:.2f} -> {fo[-1]:.2f}")
+
+    # 6. when does SA win? The paper's Table I cost model:
     dims = ProblemDims(m=2_396_130, n=3_231_961, f=3.6e-5)  # url, at scale
     for P in (1024, 12288):
         s_star, speedup = best_s(dims, H=10_000, mu=1, P=P,
@@ -64,7 +75,7 @@ def main():
               f"predicted speedup {speedup:.1f}x "
               f"(paper measured 1.2x-5.1x at up to 12k cores)")
 
-    # 6. ...or stop guessing (s, mu) entirely: tune="auto" calibrates
+    # 7. ...or stop guessing (s, mu) entirely: tune="auto" calibrates
     # the Table I machine model against short measured pilot solves on
     # THIS host and picks the config (repro.tune; the calibrated
     # machine is cached under results/tuned/, so only the first solve

@@ -17,6 +17,7 @@ checked API surface: ``tools/check_api_surface.py`` diffs it against
 """
 from repro.core.api import (BACKENDS, families, lower_solve,
                             resolve_family, solve, solve_sharded)
+from repro.core.sfista import SFISTAProblem
 from repro.core.types import (FAMILIES, KERNELS, KernelSpec, LassoProblem,
                               LogRegProblem, ProblemFamily, SVMProblem,
                               SolveState, SolverConfig, SolverResult,
@@ -32,6 +33,6 @@ __all__ = [
     "FAMILIES", "ProblemFamily", "register_family",
     "KERNELS", "KernelSpec", "register_kernel", "build_kernel_params",
     # problem / config / result types
-    "LassoProblem", "SVMProblem", "LogRegProblem",
+    "LassoProblem", "SVMProblem", "LogRegProblem", "SFISTAProblem",
     "SolverConfig", "SolverResult", "SolveState", "SparseOperand",
 ]

@@ -28,6 +28,9 @@ from repro.core.kernel_svm import (kbdcd_svm, kernel_dual_objective,
                                    sa_kbdcd_svm, solve_ksvm)
 from repro.core.logreg import bcd_logreg, logreg_objective, solve_logreg
 from repro.core.sa_logreg import sa_bcd_logreg
+from repro.core.sfista import (SFISTAProblem, ca_sfista, sfista,
+                               sfista_objective, solve_sfista)
+from repro.core.engine import FamilyProgram, run_program
 from repro.core.distributed import solve_lasso_sharded, solve_svm_sharded
 
 __all__ = [
@@ -44,5 +47,8 @@ __all__ = [
     "kbdcd_svm", "sa_kbdcd_svm", "solve_ksvm", "kernel_dual_objective",
     "duality_gap", "dual_objective", "primal_objective",
     "bcd_logreg", "sa_bcd_logreg", "solve_logreg", "logreg_objective",
+    "SFISTAProblem", "sfista", "ca_sfista", "solve_sfista",
+    "sfista_objective",
+    "FamilyProgram", "run_program",
     "solve_lasso_sharded", "solve_svm_sharded",
 ]

@@ -36,12 +36,13 @@ from repro.core.types import (FAMILIES, ProblemFamily, SolveState,
 
 # Importing the family modules is what populates FAMILIES: each family
 # self-registers from its own module (the ``KERNELS`` pattern). A new
-# family only needs to be imported somewhere — these four lines are the
+# family only needs to be imported somewhere — these five lines are the
 # complete dispatch "table".
 import repro.core.lasso       # noqa: F401  (registers "lasso")
 import repro.core.svm         # noqa: F401  (registers "svm")
 import repro.core.kernel_svm  # noqa: F401  (registers "ksvm")
 import repro.core.logreg      # noqa: F401  (registers "logreg")
+import repro.core.sfista      # noqa: F401  (registers "sfista")
 
 AxisNames = Union[str, Tuple[str, ...]]
 

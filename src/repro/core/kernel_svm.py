@@ -24,14 +24,11 @@ communication for K-BDCD: ONE fused Allreduce of the local cross
 products  [A Y^T | rownorms(A)]  (the norms column rides along only for
 kernels that need it, e.g. rbf). The kernel transform itself is applied
 AFTER the reduction on the replicated copy, so kernelizing changes no
-communication structure. SA-K-BDCD amortizes: sample all s blocks up
-front, Allreduce the (m, s*mu [+1]) cross block once, kernelize, and run
-the s inner updates redundantly — through the same
-``repro.kernels.svm_inner`` fused Pallas kernel as the linear solver
-(``cfg.use_pallas``; the chosen path lands in
-``SolverResult.aux["inner_impl"]``). Deferred updates per group: ONE
-local GEMV  f += K(A, Y) (b * theta)  (plus the linear primal shadow
-x += Y^T (b * theta), exact for kernel="linear").
+communication structure. SA-K-BDCD amortizes this as an engine
+FamilyProgram (see ``sa_kbdcd_svm``), running the s inner updates
+through the same ``repro.kernels.svm_inner`` fused Pallas kernel as the
+linear solver (``cfg.use_pallas``; the chosen path lands in
+``SolverResult.aux["inner_impl"]``).
 
 ``kernel="linear"`` reproduces ``bdcd_svm`` / ``sa_bdcd_svm`` iterates
 exactly (f = A x by definition) — tested in tests/test_kernel_svm.py —
@@ -40,9 +37,7 @@ at O(m) replicated state instead of the (mu, mu+1) reduced message, so
 solvers and sends everything else here.
 
 ``cfg.symmetric_gram`` does not apply (the (m, s*mu) cross block is not
-symmetric) and is ignored. Remainder iterations: as in the other SA
-solvers, floor(H/s) full groups run in a scan and one tail group of
-H mod s iterations finishes the schedule.
+symmetric) and is ignored.
 """
 from __future__ import annotations
 
@@ -52,21 +47,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cost_model, linalg
-from repro.core.sa_loop import grouped_impl_label, run_grouped
+from repro.core.engine import Ctx, FamilyProgram, run_program
 from repro.core.sparse_exec import (cross_block, prep_operand,
                                     row_block_ops, spmm_aux)
 from repro.core.types import (SVMProblem, SolveState, SolverConfig,
                               SolverResult, SparseOperand, register_family,
                               resume_carry)
 from repro.kernels import spmm
-from repro.kernels.svm_inner import inner_impl, svm_inner_loop
+from repro.kernels.svm_inner import svm_inner_loop
 
 
 def _local_norms(A, needs_norms: bool):
-    """(m, 1) local partial squared row norms (loop-invariant — computed
-    ONCE per solve and re-fused into every iteration's Allreduce), or
-    None for kernels that don't need them. Sparse operands sum their
-    stored row values (O(nnz))."""
+    """(m, 1) local partial squared row norms, computed ONCE per solve
+    and re-fused into every Allreduce; None when the kernel needs
+    none. Sparse operands sum their stored row values (O(nnz))."""
     if not needs_norms:
         return None
     if isinstance(A, SparseOperand):
@@ -82,18 +76,6 @@ def _reduce_cross(local, axis_name, norms_local):
     red = linalg.preduce(
         jnp.concatenate([local, norms_local], axis=1), axis_name)
     return red[:, :-1], red[:, -1]
-
-
-def _cross_and_norms(A, YT, axis_name, norms_local, use_pallas=False):
-    """ONE fused Allreduce of  [A Y^T | rownorms]:  the (m, c) linear
-    cross products between every data point and the c sampled rows
-    (``YT`` is the densified (n_loc, c) sample), plus (when the kernel
-    needs them) the precomputed squared-row-norms column — keeping the
-    solver at exactly one Allreduce per (outer) iteration with no setup
-    collective. A sparse A contracts its row-major blocked-ELL arrays
-    (``repro.kernels.spmm``): O(nnz * c) local flops."""
-    return _reduce_cross(cross_block(A, YT, use_pallas), axis_name,
-                         norms_local)
 
 
 def _full_cross_local(A):
@@ -219,8 +201,9 @@ def kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
         Y = take(idx)                                    # (mu, n_loc) local
         b_B = b[idx]
         # --- Communication: ONE fused Allreduce of [A Y^T | norms] ---
-        cross, anorms = _cross_and_norms(A, densify(Y), axis_name,
-                                         norms_local, cfg.use_pallas)
+        cross, anorms = _reduce_cross(
+            cross_block(A, densify(Y), cfg.use_pallas), axis_name,
+            norms_local)
         Kcol = _kernelize(problem, cross, anorms, idx, cfg.dtype)
         KBB = Kcol[idx] + gamma * eye_mu                 # (mu, mu)
         a_B = alpha[idx]
@@ -253,83 +236,102 @@ def kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
                              **spmm_aux(A, cfg, "cross")})
 
 
+def _sak_setup(problem, cfg, axis_name, alpha0, carry0):
+    A, b, alpha, x, f, dual0 = _init_state(problem, cfg, axis_name, alpha0,
+                                           carry0)
+    take, _, densify, apply_t = row_block_ops(A, cfg)
+    ctx = Ctx(A=A, b=b, m=A.shape[0], mu=cfg.block_size,
+              gamma=jnp.asarray(problem.gamma, cfg.dtype),
+              gamma_f=float(problem.gamma), nu_f=float(problem.nu),
+              take=take, densify=densify, apply_t=apply_t,
+              norms_local=_local_norms(A, problem.kernel_spec.needs_norms),
+              problem=problem, cfg=cfg, axis_name=axis_name)
+    return ctx, (alpha, x, f, dual0)
+
+
+def _sak_assemble(ctx, carry, idxs, s_grp):
+    flat = idxs.reshape(s_grp * ctx.mu)
+    Y = ctx.take(flat)                                # (s_grp*mu, n_loc)
+    # LOCAL half of the fused [A Y^T | norms] cross block — the norms
+    # column rides along only when the kernel needs it (rbf).
+    local = cross_block(ctx.A, ctx.densify(Y), ctx.cfg.use_pallas)
+    if ctx.norms_local is not None:
+        local = jnp.concatenate([local, ctx.norms_local], axis=1)
+    return Y, local
+
+
+def _sak_reduce(ctx, local, idxs, s_grp):
+    # the group's ONE Allreduce, then kernelize the replicated copy:
+    # K(A, Y_group) + the regularized (s*mu, s*mu) block K(Y, Y), whose
+    # off-diagonal blocks carry the inner cross terms.
+    flat = idxs.reshape(s_grp * ctx.mu)
+    red = linalg.preduce(local, ctx.axis_name)
+    cross, anorms = (red, None) if ctx.norms_local is None \
+        else (red[:, :-1], red[:, -1])
+    Kfull = _kernelize(ctx.problem, cross, anorms, flat, ctx.cfg.dtype)
+    G = Kfull[flat] \
+        + ctx.gamma * jnp.eye(s_grp * ctx.mu, dtype=ctx.cfg.dtype)
+    return G, Kfull
+
+
+def _sak_inner(ctx, carry, Y, payload, idxs, win, s_grp):
+    alpha, _, f, _ = carry
+    cfg = ctx.cfg
+    G, Kfull = payload
+    flat = idxs.reshape(s_grp * ctx.mu)
+    b_sel = ctx.b[flat].reshape(s_grp, ctx.mu)
+    theta, deltas = svm_inner_loop(
+        G, f[flat].reshape(s_grp, ctx.mu), b_sel,      # proj = f_sk gather
+        alpha[flat].reshape(s_grp, ctx.mu), idxs, gamma=ctx.gamma_f,
+        nu=ctx.nu_f, power_iters=cfg.power_iters,
+        use_pallas=cfg.use_pallas)
+    return carry, (theta.astype(cfg.dtype), deltas.astype(cfg.dtype),
+                   b_sel, flat)
+
+
+def _sak_defer(ctx, carry, Y, inner_out, payload, idxs, win, s_grp):
+    alpha, x, f, dual = carry
+    _, Kfull = payload
+    theta, deltas, b_sel, flat = inner_out
+    bt = (b_sel * theta).reshape(s_grp * ctx.mu)
+    alpha = alpha.at[flat].add(theta.reshape(s_grp * ctx.mu))
+    f = f + Kfull @ bt                                # deferred GEMV
+    x = x + ctx.apply_t(Y, bt)                        # primal shadow
+    objs = dual + jnp.cumsum(deltas) if ctx.cfg.track_objective \
+        else jnp.zeros((s_grp,), ctx.cfg.dtype)
+    dual = dual + jnp.sum(deltas)
+    return (alpha, x, f, dual), objs
+
+
+_SAK_PROGRAM = FamilyProgram(
+    name="sa_kbdcd_svm", setup=_sak_setup,
+    sample=lambda ctx, key: linalg.sample_block(key, ctx.m, ctx.mu),
+    assemble=_sak_assemble, reduce=_sak_reduce, inner=_sak_inner,
+    defer=_sak_defer,
+    finalize=lambda ctx, carry, sched: (
+        carry[1], {"alpha": carry[0], "dual": carry[3], "f": carry[2]}),
+    carry_names=("alpha", "x", "f", "dual"), uses_svm_inner=True,
+    spmm_kind="cross")
+
+
 def sa_kbdcd_svm(problem: SVMProblem, cfg: SolverConfig,
                  axis_name: Optional[object] = None,
                  alpha0=None, state: Optional[SolveState] = None
                  ) -> SolverResult:
     """s-step unrolled K-BDCD: identical iterates to ``kbdcd_svm`` in
-    exact arithmetic, ONE Allreduce per s inner iterations.
-
-    Per outer group: Allreduce the (m, s*mu [+1]) cross block once,
-    kernelize it to K(A, Y_group), slice out the (s*mu, s*mu) block
-    K(Y, Y) whose off-diagonal blocks carry the inner cross terms, and
-    run the s dependent updates through ``repro.kernels.svm_inner`` on
-    replicated data — the projections are the gathered f_sk[idx] (no
-    projection communication at all, unlike the linear solver). Deferred
-    per group:  f += K(A, Y) vec(b theta)  and the primal shadow GEMV.
-    """
-    mu = cfg.block_size
-    gamma = jnp.asarray(problem.gamma, cfg.dtype)
-    gamma_f, nu_f = float(problem.gamma), float(problem.nu)
-    key = jax.random.key(cfg.seed)
-    s, H = cfg.s, cfg.iterations
-    carry0 = resume_carry(state, alpha0, "sa_kbdcd_svm")
-    h0 = 0 if state is None else int(state.iteration)
-    A, b, alpha, x, f, dual0 = _init_state(problem, cfg, axis_name, alpha0,
-                                           carry0)
-    take, _, densify, apply_t = row_block_ops(A, cfg)
-    norms_local = _local_norms(A, problem.kernel_spec.needs_norms)
-    m = A.shape[0]
-
-    def group(carry, start, s_grp):
-        alpha, x, f, dual = carry
-        hs = start + 1 + jnp.arange(s_grp)
-        idxs = jax.vmap(
-            lambda h: linalg.sample_block(jax.random.fold_in(key, h),
-                                          m, mu))(hs)     # (s_grp, mu)
-        flat = idxs.reshape(s_grp * mu)
-        Y = take(flat)                                    # (s_grp*mu, n_loc)
-        b_sel = b[flat].reshape(s_grp, mu)
-        # --- Communication: ONE fused Allreduce of [A Y^T | norms] ---
-        cross, anorms = _cross_and_norms(A, densify(Y), axis_name,
-                                         norms_local, cfg.use_pallas)
-        Kfull = _kernelize(problem, cross, anorms, flat, cfg.dtype)
-        Kblock = Kfull[flat]                              # K(Y, Y)
-        G = Kblock + gamma * jnp.eye(s_grp * mu, dtype=cfg.dtype)
-        proj = f[flat].reshape(s_grp, mu)                 # f_sk gather
-        a_vals = alpha[flat].reshape(s_grp, mu)
-        theta, deltas = svm_inner_loop(
-            G, proj, b_sel, a_vals, idxs, gamma=gamma_f, nu=nu_f,
-            power_iters=cfg.power_iters, use_pallas=cfg.use_pallas)
-        theta = theta.astype(cfg.dtype)
-        deltas = deltas.astype(cfg.dtype)
-        bt = (b_sel * theta).reshape(s_grp * mu)
-        alpha = alpha.at[flat].add(theta.reshape(s_grp * mu))
-        f = f + Kfull @ bt                                # deferred GEMV
-        x = x + apply_t(Y, bt)                            # primal shadow
-        objs = dual + jnp.cumsum(deltas) if cfg.track_objective \
-            else jnp.zeros((s_grp,), cfg.dtype)
-        dual = dual + jnp.sum(deltas)
-        return (alpha, x, f, dual), objs
-
-    (alpha, x, f, dual), objs = run_grouped(
-        group, (alpha, x, f, dual0), H, s, cfg.dtype, start=h0)
-    return SolverResult(x=x, objective=objs,
-                        aux={"alpha": alpha, "dual": dual, "f": f,
-                             "state": SolveState(
-                                 h0 + H, {"alpha": alpha, "x": x, "f": f,
-                                          "dual": dual}),
-                             "inner_impl": grouped_impl_label(
-                                 inner_impl, H, s, mu, cfg.use_pallas,
-                                 jnp.dtype(cfg.dtype).itemsize),
-                             **spmm_aux(A, cfg, "cross", H=H)})
+    exact arithmetic, ONE Allreduce of the (m, s*mu [+1]) cross block
+    per s inner iterations. The inner projections are the gathered
+    f_sk[idx] — no projection communication at all, unlike the linear
+    solver. Deferred per group: f += K(A, Y) vec(b theta) + the primal
+    shadow GEMV."""
+    return run_program(_SAK_PROGRAM, problem, cfg, axis_name, alpha0,
+                       state)
 
 
 def _cli_kernel(args) -> str:
-    """--kernel is None when unset; the kernelized family defaults to
-    rbf, but an EXPLICIT --kernel linear is honored (the kernelized
-    linear path reproduces BDCD iterates — a communication-cost choice,
-    not an algorithmic one)."""
+    """--kernel is None when unset; this family defaults to rbf, but an
+    EXPLICIT --kernel linear is honored (the kernelized linear path
+    reproduces BDCD iterates — a communication-cost choice)."""
     return args.kernel or "rbf"
 
 
@@ -383,13 +385,9 @@ def _cli_describe(args, res, elapsed: float) -> str:
 def solve_ksvm(problem: SVMProblem, cfg: SolverConfig,
                axis_name: Optional[object] = None,
                x0=None, state=None) -> SolverResult:
-    """Dispatch on cfg.s: classical K-BDCD vs the SA unroll.
-
-    x0: optional warm start for the dual vector alpha (replicated (m,));
-    rebuilding the dual residual f = K(b alpha) costs one extra setup
-    Allreduce (zero-start costs none; a ``state=`` resume restores f
-    verbatim and costs none either).
-    """
+    """Dispatch on cfg.s. x0: optional warm start for the dual alpha
+    (replicated (m,)); rebuilding f = K(b alpha) costs one setup
+    Allreduce (zero start and ``state=`` resume cost none)."""
     if cfg.s > 1:
         return sa_kbdcd_svm(problem, cfg, axis_name, x0, state)
     return kbdcd_svm(problem, cfg, axis_name, x0, state)

@@ -71,6 +71,25 @@ def theta_schedule(theta0, num: int, q: float):
     return jnp.concatenate([jnp.asarray(theta0)[None], rest])
 
 
+def fista_t_schedule(num: int, dtype=jnp.float32):
+    """Pre-compute the FISTA momentum scalars (Beck & Teboulle; used by
+    CA-SFISTA, arXiv:1710.08883):
+
+        t_0 = 1,    t_h = (1 + sqrt(1 + 4 t_{h-1}^2)) / 2,
+
+    from which iteration h's momentum is beta_h = (t_{h-1} - 1) / t_h
+    (so beta_1 = 0: the first step carries no momentum). Returns
+    ts[0..num] with ts[0] = 1."""
+    t0 = jnp.asarray(1.0, dtype)
+
+    def body(t, _):
+        nxt = (1.0 + jnp.sqrt(1.0 + 4.0 * t * t)) / 2.0
+        return nxt, nxt
+
+    _, rest = jax.lax.scan(body, t0, None, length=num)
+    return jnp.concatenate([t0[None], rest])
+
+
 def sample_block(key, n: int, mu: int):
     """Sample mu of n coordinates uniformly without replacement.
 

@@ -1,6 +1,7 @@
 """Synchronization-Avoiding coordinate-descent solvers for proximal
 least-squares — paper Algorithm 2 (SA-accBCD) and the non-accelerated
-SA-BCD / SA-CD variants.
+SA-BCD / SA-CD variants, expressed as :class:`repro.core.engine`
+FamilyPrograms.
 
 The transformation (paper Sec. III): unroll the recurrences s iterations,
 sample all s*mu coordinates up front, compute ONE (s*mu) x (s*mu) Gram
@@ -9,6 +10,12 @@ run the s inner updates redundantly on replicated O(s*mu)-sized data, and
 apply the deferred m-dimensional vector updates (paper Eqs. 6-9) as local
 GEMVs. Latency drops by s; flops/bandwidth grow by s (paper Table I). The
 iterate sequence is identical to Algorithm 1 in exact arithmetic.
+
+Only the algorithm lives here — sampled-block assembly, the fused
+payload, the inner recurrence, the deferred application and the
+objective stitching. All s-step scheduling (grouping, remainder tails,
+fold_in ids, SolveState resume, the θ schedule windows) is owned by
+:func:`repro.core.engine.run_program`.
 
 The hot spots map to the two Pallas kernels:
   * ``repro.kernels.gram``     — the fused  Y^T [Y | ytil | ztil]  GEMM
@@ -23,283 +30,275 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import linalg
+# Compatibility aliases: these helpers moved into the engine.
+from repro.core.engine import (Ctx, FamilyProgram, deferred_steps,
+                               gram_and_proj as _gram_and_proj,
+                               gram_local,
+                               reduce_gram_proj as _reduce_gram_proj,
+                               run_program,
+                               sample_all as _sample_all)
 from repro.core.lasso import _objective, _prep
-from repro.core.sa_loop import run_grouped
-from repro.core.sparse_exec import col_block_ops, spmm_aux
+from repro.core.sparse_exec import col_block_ops
 from repro.core.types import (LassoProblem, SolveState, SolverConfig,
                               SolverResult, SparseOperand, operand_matvec,
-                              require_unit_block, resume_carry)
-from repro.kernels import spmm
-from repro.kernels.gram import gram_t
+                              require_unit_block)
 
 
-def _reduce_gram_proj(local, smu, vec_cols, axis_name,
-                      symmetric: bool = False):
-    """ONE fused Allreduce of the LOCAL (smu, smu + k) Gram/projection
-    block -> (G, P) replicated, with G (smu, smu) and P (smu, k).
-
-    symmetric (``SolverConfig.symmetric_gram``, paper footnote 3): G is
-    symmetric, so communicating only its lower triangle halves the message
-    size — ~2x less W at O(s^2 mu^2) local pack/unpack reshuffling. The
-    reduced values are identical, only their layout changes.
-    """
-    if symmetric:
-        il, jl = jnp.tril_indices(smu)
-        packed = jnp.concatenate(
-            [local[:, :smu][il, jl], local[:, smu:].reshape(-1)])
-        packed = linalg.preduce(packed, axis_name)
-        ntri = il.shape[0]
-        G = jnp.zeros((smu, smu), local.dtype).at[il, jl].set(packed[:ntri])
-        G = G + jnp.tril(G, -1).T
-        P = packed[ntri:].reshape(smu, vec_cols)
-        return G, P
-    out = linalg.preduce(local, axis_name)
-    return out[:, :smu], out[:, smu:]
+def _lasso_ctx(problem, cfg, axis_name):
+    A, b, n, mu, q, sampler, prox = _prep(problem, cfg)
+    return Ctx(A=A, b=b, n=n, mu=mu, q=q, sampler=sampler, prox=prox,
+               sparse=isinstance(A, SparseOperand),
+               block_gram=col_block_ops(A, cfg)[0],
+               m_loc=A.shape[0], problem=problem, cfg=cfg,
+               axis_name=axis_name)
 
 
-def _gram_and_proj(Y, vecs, axis_name, symmetric: bool = False,
-                   use_pallas: bool = False):
-    """ONE fused Allreduce:  Y^T @ [Y | vecs]  (paper Alg. 2 lines 11-12).
-
-    Y: (m_loc, s*mu) sampled columns; vecs: (m_loc, k) residual-like vectors.
-    Returns (G, P) with G (s*mu, s*mu) and P (s*mu, k), replicated.
-
-    use_pallas routes the local GEMM through the ``repro.kernels.gram``
-    Pallas kernel (f32 MXU accumulation); the plain-jnp path otherwise.
-    (Sparse operands compute the same local block via the blocked-ELL
-    SpMM in the solvers below and share :func:`_reduce_gram_proj`.)
-    """
-    rhs = jnp.concatenate([Y, vecs], axis=1)
-    if use_pallas:
-        local = gram_t(Y, rhs, use_pallas=True).astype(Y.dtype)
-    else:
-        local = Y.T @ rhs
-    return _reduce_gram_proj(local, Y.shape[1], vecs.shape[1], axis_name,
-                             symmetric)
+def _lasso_sample(ctx, key):
+    return ctx.sampler(key)
 
 
-def _sample_all(key, sampler, start, s_grp):
-    """Sample the s_grp blocks of the outer group starting after global
-    iteration id ``start``, matching the non-SA fold_in indices
-    (h = start + j, j = 1..s_grp) so SA and non-SA draw bit-identical
-    coordinate sequences."""
-    hs = start + 1 + jnp.arange(s_grp)
-    return jax.vmap(lambda h: sampler(jax.random.fold_in(key, h)))(hs)
+def _lasso_assemble(ctx, vecs, idxs, s_grp):
+    """LOCAL fused Gram/projection payload for the group's sampled
+    columns: (handle, Y^T [Y | vecs]). ``handle`` (the dense sampled
+    columns, or the sparse gather triple) feeds the deferred GEMVs."""
+    flat = idxs.reshape(s_grp * ctx.mu)
+    if ctx.sparse:
+        return ctx.block_gram(flat, vecs)
+    Y = ctx.A[:, flat]                                # (m_loc, s*mu) local
+    return Y, gram_local(Y, vecs, ctx.cfg.use_pallas)
+
+
+def _lasso_reduce(ctx, local, idxs, s_grp, vec_cols):
+    return _reduce_gram_proj(local, s_grp * ctx.mu, vec_cols,
+                             ctx.axis_name, ctx.cfg.symmetric_gram)
+
+
+def _stepped_iterates(x, idxs, buf, s_grp, n, dtype):
+    """Reconstruct the per-inner-iteration coordinate iterates from the
+    final x and the step buffer, for objective stitching: (s_grp, n)."""
+    dfull = jnp.zeros((s_grp, n), dtype).at[
+        jnp.arange(s_grp)[:, None], idxs].add(buf)
+    return (x - jnp.sum(dfull, 0))[None, :] + jnp.cumsum(dfull, axis=0), \
+        dfull
 
 
 # ---------------------------------------------------------------------------
 # SA-BCD (non-accelerated): r_j = A_j^T r_sk + sum_{t<j} G[j,t] dx_t
 # ---------------------------------------------------------------------------
 
+def _bcd_setup(problem, cfg, axis_name, x0, carry0):
+    ctx = _lasso_ctx(problem, cfg, axis_name)
+    if carry0 is not None:
+        x = jnp.asarray(carry0["x"], cfg.dtype)
+        r = jnp.asarray(carry0["residual"], cfg.dtype)
+    elif x0 is None:
+        x = jnp.zeros((ctx.n,), cfg.dtype)
+        r = -ctx.b
+    else:
+        x = jnp.asarray(x0, cfg.dtype)
+        r = operand_matvec(ctx.A, x) - ctx.b
+    return ctx, (x, r)
+
+
+def _bcd_assemble(ctx, carry, idxs, s_grp):
+    return _lasso_assemble(ctx, carry[1][:, None], idxs, s_grp)
+
+
+def _bcd_reduce(ctx, local, idxs, s_grp):
+    return _lasso_reduce(ctx, local, idxs, s_grp, 1)
+
+
+def _bcd_inner(ctx, carry, handle, payload, idxs, win, s):
+    x, r = carry
+    cfg, mu = ctx.cfg, ctx.mu
+    G, P = payload
+    G4 = G.reshape(s, mu, s, mu)
+    r_proj = P[:, 0].reshape(s, mu)
+
+    def inner(inner_carry, j):
+        x, dx_buf = inner_carry
+        idx_j = idxs[j]
+        Gj = G4[j]                                    # (mu, s, mu)
+        cross = jnp.einsum("ptq,tq->tp", Gj, dx_buf)  # (s, mu)
+        mask = (jnp.arange(s) < j).astype(cfg.dtype)
+        rj = r_proj[j] + jnp.einsum("t,tp->p", mask, cross)
+        v = linalg.power_iteration_max_eig(Gj[:, j, :], cfg.power_iters)
+        eta = 1.0 / linalg.floor_eig(v)  # floored: zero block -> no-op
+        g = x[idx_j] - eta * rj
+        dx = ctx.prox(g, eta) - x[idx_j]
+        x = x.at[idx_j].add(dx)
+        dx_buf = dx_buf.at[j].set(dx)
+        return (x, dx_buf), None
+
+    (x, dx_buf), _ = jax.lax.scan(
+        inner, (x, jnp.zeros((s, mu), cfg.dtype)), jnp.arange(s))
+    return (x, r), dx_buf
+
+
+def _bcd_defer(ctx, carry, handle, dx_buf, payload, idxs, win, s):
+    x, r = carry
+    cfg = ctx.cfg
+    # Deferred residual update (Eq. 7): local GEMV / sparse scatter-adds
+    steps = deferred_steps(ctx, handle, dx_buf, s)
+    r_new = r + jnp.sum(steps, axis=0)
+
+    if cfg.track_objective:
+        r_steps = r[None, :] + jnp.cumsum(steps, axis=0)
+        x_steps, _ = _stepped_iterates(x, idxs, dx_buf, s, ctx.n, cfg.dtype)
+        objs = jax.vmap(
+            lambda rr, xx: _objective(rr, xx, ctx.problem, ctx.axis_name))(
+            r_steps, x_steps)
+    else:
+        objs = jnp.zeros((s,), cfg.dtype)
+    return (x, r_new), objs
+
+
+def _bcd_finalize(ctx, carry, sched):
+    x, r = carry
+    return x, {"residual": r}
+
+
+_BCD_PROGRAM = FamilyProgram(
+    name="sa_bcd_lasso", setup=_bcd_setup, sample=_lasso_sample,
+    assemble=_bcd_assemble, reduce=_bcd_reduce, inner=_bcd_inner,
+    defer=_bcd_defer, finalize=_bcd_finalize,
+    carry_names=("x", "residual"), spmm_kind="col_gram", spmm_extra=1)
+
+
 def sa_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
                  axis_name: Optional[object] = None,
                  x0=None, state: Optional[SolveState] = None) -> SolverResult:
-    A, b, n, mu, q, sampler, prox = _prep(problem, cfg)
-    sparse = isinstance(A, SparseOperand)
-    block_gram, _ = col_block_ops(A, cfg)
-    key = jax.random.key(cfg.seed)
-    s, H = cfg.s, cfg.iterations
-    m_loc = A.shape[0]
-    carry0 = resume_carry(state, x0, "sa_bcd_lasso")
-    h0 = 0 if state is None else int(state.iteration)
-
-    if carry0 is not None:
-        x0 = jnp.asarray(carry0["x"], cfg.dtype)
-        r0 = jnp.asarray(carry0["residual"], cfg.dtype)
-    elif x0 is None:
-        x0 = jnp.zeros((n,), cfg.dtype)
-        r0 = -b
-    else:
-        x0 = jnp.asarray(x0, cfg.dtype)
-        r0 = operand_matvec(A, x0) - b
-
-    def group(carry, start, s):
-        x, r = carry
-        idxs = _sample_all(key, sampler, start, s)        # (s, mu)
-        # --- Communication: ONE fused Allreduce ---
-        if sparse:
-            handle, local = block_gram(idxs.reshape(s * mu), r[:, None])
-            G, P = _reduce_gram_proj(local, s * mu, 1, axis_name,
-                                     cfg.symmetric_gram)
-        else:
-            Y = A[:, idxs.reshape(s * mu)]                # (m_loc, s*mu) local
-            G, P = _gram_and_proj(Y, r[:, None], axis_name,
-                                  symmetric=cfg.symmetric_gram,
-                                  use_pallas=cfg.use_pallas)
-        G4 = G.reshape(s, mu, s, mu)
-        r_proj = P[:, 0].reshape(s, mu)
-
-        def inner(inner_carry, j):
-            x, dx_buf = inner_carry
-            idx_j = idxs[j]
-            Gj = G4[j]                                    # (mu, s, mu)
-            cross = jnp.einsum("ptq,tq->tp", Gj, dx_buf)  # (s, mu)
-            mask = (jnp.arange(s) < j).astype(cfg.dtype)
-            rj = r_proj[j] + jnp.einsum("t,tp->p", mask, cross)
-            v = linalg.power_iteration_max_eig(Gj[:, j, :], cfg.power_iters)
-            eta = 1.0 / linalg.floor_eig(v)  # floored: zero block -> no-op
-            g = x[idx_j] - eta * rj
-            dx = prox(g, eta) - x[idx_j]
-            x = x.at[idx_j].add(dx)
-            dx_buf = dx_buf.at[j].set(dx)
-            return (x, dx_buf), None
-
-        (x, dx_buf), _ = jax.lax.scan(
-            inner, (x, jnp.zeros((s, mu), cfg.dtype)), jnp.arange(s))
-
-        # Deferred residual update (paper Eq. 7 analogue): local GEMV
-        # (sparse: O(nnz of the sampled columns) scatter-adds).
-        if sparse:
-            rows_g, vals_g, _ = handle
-            steps = spmm.scatter_steps(rows_g.reshape(s, mu, -1),
-                                       vals_g.reshape(s, mu, -1),
-                                       dx_buf, m_loc)
-        else:
-            steps = jnp.einsum("msc,sc->sm", Y.reshape(m_loc, s, mu), dx_buf)
-        r_new = r + jnp.sum(steps, axis=0)
-
-        if cfg.track_objective:
-            r_steps = r[None, :] + jnp.cumsum(steps, axis=0)
-            dx_full = jnp.zeros((s, n), cfg.dtype).at[
-                jnp.arange(s)[:, None], idxs].add(dx_buf)
-            x_steps = (x - jnp.sum(dx_full, 0))[None, :] \
-                + jnp.cumsum(dx_full, axis=0)
-            objs = jax.vmap(
-                lambda rr, xx: _objective(rr, xx, problem, axis_name))(
-                r_steps, x_steps)
-        else:
-            objs = jnp.zeros((s,), cfg.dtype)
-        return (x, r_new), objs
-
-    (x, r), objs = run_grouped(group, (x0, r0), H, s, cfg.dtype, start=h0)
-    return SolverResult(x=x, objective=objs,
-                        aux={"residual": r,
-                             "state": SolveState(h0 + H,
-                                                 {"x": x, "residual": r}),
-                             **spmm_aux(A, cfg, "col_gram", H=H, extra=1)})
+    return run_program(_BCD_PROGRAM, problem, cfg, axis_name, x0, state)
 
 
 # ---------------------------------------------------------------------------
 # SA-accBCD — paper Algorithm 2.
 # ---------------------------------------------------------------------------
 
+def _acc_setup(problem, cfg, axis_name, x0, carry0):
+    ctx = _lasso_ctx(problem, cfg, axis_name)
+    if carry0 is not None:
+        z = jnp.asarray(carry0["z"], cfg.dtype)
+        y = jnp.asarray(carry0["y"], cfg.dtype)
+        ztil = jnp.asarray(carry0["ztil"], cfg.dtype)
+        ytil = jnp.asarray(carry0["ytil"], cfg.dtype)
+    else:
+        if x0 is None:
+            z = jnp.zeros((ctx.n,), cfg.dtype)
+            ztil = -ctx.b
+        else:
+            z = jnp.asarray(x0, cfg.dtype)
+            ztil = operand_matvec(ctx.A, z) - ctx.b
+        y = jnp.zeros((ctx.n,), cfg.dtype)
+        ytil = jnp.zeros_like(ctx.b)
+    return ctx, (z, y, ztil, ytil)
+
+
+def _acc_schedule(ctx, cfg, total):
+    theta0 = jnp.asarray(ctx.mu / ctx.n, cfg.dtype)
+    return linalg.theta_schedule(theta0, total, ctx.q)    # (total+1,)
+
+
+def _acc_assemble(ctx, carry, idxs, s_grp):
+    z, y, ztil, ytil = carry
+    return _lasso_assemble(ctx, jnp.stack([ytil, ztil], axis=1), idxs,
+                           s_grp)
+
+
+def _acc_reduce(ctx, local, idxs, s_grp):
+    return _lasso_reduce(ctx, local, idxs, s_grp, 2)
+
+
+def _acc_coefU(ctx, th_prev):
+    """Alg. 2 lines 21-22 coefficient (1 - q θ_{j-1}) / θ_{j-1}^2."""
+    return (1.0 - ctx.q * th_prev) / (th_prev * th_prev)
+
+
+def _acc_inner(ctx, carry, handle, payload, idxs, win, s):
+    z, y, ztil, ytil = carry
+    cfg, mu, q = ctx.cfg, ctx.mu, ctx.q
+    G, P = payload
+    G4 = G.reshape(s, mu, s, mu)
+    y_proj = P[:, 0].reshape(s, mu)                   # A_j^T ytil_sk
+    z_proj = P[:, 1].reshape(s, mu)                   # A_j^T ztil_sk
+    th_prev, _ = win
+    coefU = _acc_coefU(ctx, th_prev)
+
+    def inner(inner_carry, j):
+        z, y, dz_buf = inner_carry
+        idx_j = idxs[j]
+        thp = th_prev[j]
+        Gj = G4[j]                                    # (mu, s, mu)
+        cross = jnp.einsum("ptq,tq->tp", Gj, dz_buf)  # (s, mu)
+        # Eq. (3): coefficient (theta_{j-1}^2 * coefU_t - 1) on G[j,t] dz_t
+        coef_t = thp * thp * coefU - 1.0              # (s,)
+        mask = (jnp.arange(s) < j).astype(cfg.dtype)
+        rj = thp * thp * y_proj[j] + z_proj[j] \
+            - jnp.einsum("t,t,tp->p", mask, coef_t, cross)
+        v = linalg.power_iteration_max_eig(Gj[:, j, :],
+                                           cfg.power_iters)  # line 14
+        eta = 1.0 / linalg.floor_eig(q * thp * v)     # line 15 (floored)
+        g = z[idx_j] - eta * rj                       # Eq. (4)
+        dz = ctx.prox(g, eta) - z[idx_j]              # Eq. (5)
+        z = z.at[idx_j].add(dz)                       # line 19
+        y = y.at[idx_j].add(-coefU[j] * dz)           # line 21
+        dz_buf = dz_buf.at[j].set(dz)
+        return (z, y, dz_buf), None
+
+    (z, y, dz_buf), _ = jax.lax.scan(
+        inner, (z, y, jnp.zeros((s, mu), cfg.dtype)), jnp.arange(s))
+    return (z, y, ztil, ytil), dz_buf
+
+
+def _acc_defer(ctx, carry, handle, dz_buf, payload, idxs, win, s):
+    z, y, ztil, ytil = carry
+    cfg = ctx.cfg
+    th_prev, th_cur = win
+    coefU = _acc_coefU(ctx, th_prev)
+    # Deferred m-dimensional updates (paper Eqs. 7 & 9): local GEMVs
+    # (sparse: O(nnz of the sampled columns) scatter-adds).
+    steps = deferred_steps(ctx, handle, dz_buf, s)
+    ztil_new = ztil + jnp.sum(steps, axis=0)
+    ytil_new = ytil - jnp.einsum("t,tm->m", coefU, steps)
+
+    if cfg.track_objective:
+        ztil_steps = ztil[None, :] + jnp.cumsum(steps, axis=0)
+        ytil_steps = ytil[None, :] - jnp.cumsum(
+            coefU[:, None] * steps, axis=0)
+        dz_full = jnp.zeros((s, ctx.n), cfg.dtype).at[
+            jnp.arange(s)[:, None], idxs].add(dz_buf)
+        z_steps = (z - jnp.sum(dz_full, 0))[None, :] \
+            + jnp.cumsum(dz_full, axis=0)
+        y_steps = (y + jnp.sum(coefU[:, None] * dz_full, 0))[None, :] \
+            - jnp.cumsum(coefU[:, None] * dz_full, axis=0)
+        th2 = (th_cur * th_cur)[:, None]
+        objs = jax.vmap(
+            lambda rr, xx: _objective(rr, xx, ctx.problem, ctx.axis_name))(
+            th2 * ytil_steps + ztil_steps, th2 * y_steps + z_steps)
+    else:
+        objs = jnp.zeros((s,), cfg.dtype)
+    return (z, y, ztil_new, ytil_new), objs
+
+
+def _acc_finalize(ctx, carry, sched):
+    z, y, ztil, ytil = carry
+    thH = sched[-1]
+    return thH * thH * y + z, {"residual": thH * thH * ytil + ztil}
+
+
+_ACC_PROGRAM = FamilyProgram(
+    name="sa_acc_bcd_lasso", setup=_acc_setup, sample=_lasso_sample,
+    assemble=_acc_assemble, reduce=_acc_reduce, inner=_acc_inner,
+    defer=_acc_defer, finalize=_acc_finalize,
+    carry_names=("z", "y", "ztil", "ytil"), schedule=_acc_schedule,
+    spmm_kind="col_gram", spmm_extra=2)
+
+
 def sa_acc_bcd_lasso(problem: LassoProblem, cfg: SolverConfig,
                      axis_name: Optional[object] = None,
                      x0=None, state: Optional[SolveState] = None
                      ) -> SolverResult:
-    A, b, n, mu, q, sampler, prox = _prep(problem, cfg)
-    sparse = isinstance(A, SparseOperand)
-    block_gram, _ = col_block_ops(A, cfg)
-    key = jax.random.key(cfg.seed)
-    s, H = cfg.s, cfg.iterations
-    m_loc = A.shape[0]
-    carry0 = resume_carry(state, x0, "sa_acc_bcd_lasso")
-    h0 = 0 if state is None else int(state.iteration)
-
-    theta0 = jnp.asarray(mu / n, cfg.dtype)
-    thetas = linalg.theta_schedule(theta0, h0 + H, q)     # (h0+H+1,)
-
-    if carry0 is not None:
-        z0 = jnp.asarray(carry0["z"], cfg.dtype)
-        y0 = jnp.asarray(carry0["y"], cfg.dtype)
-        ztil0 = jnp.asarray(carry0["ztil"], cfg.dtype)
-        ytil0 = jnp.asarray(carry0["ytil"], cfg.dtype)
-    else:
-        if x0 is None:
-            z0 = jnp.zeros((n,), cfg.dtype)
-            ztil0 = -b
-        else:
-            z0 = jnp.asarray(x0, cfg.dtype)
-            ztil0 = operand_matvec(A, z0) - b
-        y0 = jnp.zeros((n,), cfg.dtype)
-        ytil0 = jnp.zeros_like(b)
-
-    def group(carry, start, s):
-        z, y, ztil, ytil = carry
-        idxs = _sample_all(key, sampler, start, s)        # (s, mu)
-        # --- Communication: ONE fused Allreduce (Alg. 2 lines 11-12) ---
-        if sparse:
-            handle, local = block_gram(idxs.reshape(s * mu),
-                                       jnp.stack([ytil, ztil], axis=1))
-            G, P = _reduce_gram_proj(local, s * mu, 2, axis_name,
-                                     cfg.symmetric_gram)
-        else:
-            Y = A[:, idxs.reshape(s * mu)]                # (m_loc, s*mu) local
-            G, P = _gram_and_proj(Y, jnp.stack([ytil, ztil], axis=1),
-                                  axis_name,
-                                  symmetric=cfg.symmetric_gram,
-                                  use_pallas=cfg.use_pallas)
-        G4 = G.reshape(s, mu, s, mu)
-        y_proj = P[:, 0].reshape(s, mu)                   # A_j^T ytil_sk
-        z_proj = P[:, 1].reshape(s, mu)                   # A_j^T ztil_sk
-        th_prev = jax.lax.dynamic_slice(thetas, (start,), (s,))
-        th_cur = jax.lax.dynamic_slice(thetas, (start + 1,), (s,))
-        coefU = (1.0 - q * th_prev) / (th_prev * th_prev)  # lines 21-22 coeff
-
-        def inner(inner_carry, j):
-            z, y, dz_buf = inner_carry
-            idx_j = idxs[j]
-            thp = th_prev[j]
-            Gj = G4[j]                                    # (mu, s, mu)
-            cross = jnp.einsum("ptq,tq->tp", Gj, dz_buf)  # (s, mu)
-            # Eq. (3): coefficient (theta_{j-1}^2 * coefU_t - 1) on G[j,t] dz_t
-            coef_t = thp * thp * coefU - 1.0              # (s,)
-            mask = (jnp.arange(s) < j).astype(cfg.dtype)
-            rj = thp * thp * y_proj[j] + z_proj[j] \
-                - jnp.einsum("t,t,tp->p", mask, coef_t, cross)
-            v = linalg.power_iteration_max_eig(Gj[:, j, :],
-                                               cfg.power_iters)  # line 14
-            eta = 1.0 / linalg.floor_eig(q * thp * v)     # line 15 (floored)
-            g = z[idx_j] - eta * rj                       # Eq. (4)
-            dz = prox(g, eta) - z[idx_j]                  # Eq. (5)
-            z = z.at[idx_j].add(dz)                       # line 19
-            y = y.at[idx_j].add(-coefU[j] * dz)           # line 21
-            dz_buf = dz_buf.at[j].set(dz)
-            return (z, y, dz_buf), None
-
-        (z, y, dz_buf), _ = jax.lax.scan(
-            inner, (z, y, jnp.zeros((s, mu), cfg.dtype)), jnp.arange(s))
-
-        # Deferred m-dimensional updates (paper Eqs. 7 & 9): local GEMVs
-        # (sparse: O(nnz of the sampled columns) scatter-adds).
-        if sparse:
-            rows_g, vals_g, _ = handle
-            steps = spmm.scatter_steps(rows_g.reshape(s, mu, -1),
-                                       vals_g.reshape(s, mu, -1),
-                                       dz_buf, m_loc)
-        else:
-            steps = jnp.einsum("msc,sc->sm", Y.reshape(m_loc, s, mu), dz_buf)
-        ztil_new = ztil + jnp.sum(steps, axis=0)
-        ytil_new = ytil - jnp.einsum("t,tm->m", coefU, steps)
-
-        if cfg.track_objective:
-            ztil_steps = ztil[None, :] + jnp.cumsum(steps, axis=0)
-            ytil_steps = ytil[None, :] - jnp.cumsum(
-                coefU[:, None] * steps, axis=0)
-            dz_full = jnp.zeros((s, n), cfg.dtype).at[
-                jnp.arange(s)[:, None], idxs].add(dz_buf)
-            z_steps = (z - jnp.sum(dz_full, 0))[None, :] \
-                + jnp.cumsum(dz_full, axis=0)
-            y_steps = (y + jnp.sum(coefU[:, None] * dz_full, 0))[None, :] \
-                - jnp.cumsum(coefU[:, None] * dz_full, axis=0)
-            th2 = (th_cur * th_cur)[:, None]
-            objs = jax.vmap(
-                lambda rr, xx: _objective(rr, xx, problem, axis_name))(
-                th2 * ytil_steps + ztil_steps, th2 * y_steps + z_steps)
-        else:
-            objs = jnp.zeros((s,), cfg.dtype)
-        return (z, y, ztil_new, ytil_new), objs
-
-    (z, y, ztil, ytil), objs = run_grouped(
-        group, (z0, y0, ztil0, ytil0), H, s, cfg.dtype, start=h0)
-    thH = thetas[-1]
-    x = thH * thH * y + z
-    return SolverResult(x=x, objective=objs,
-                        aux={"residual": thH * thH * ytil + ztil,
-                             "state": SolveState(
-                                 h0 + H, {"z": z, "y": y,
-                                          "ztil": ztil, "ytil": ytil}),
-                             **spmm_aux(A, cfg, "col_gram", H=H, extra=2)})
+    return run_program(_ACC_PROGRAM, problem, cfg, axis_name, x0, state)
 
 
 def sa_cd_lasso(problem, cfg, axis_name=None, x0=None, state=None):

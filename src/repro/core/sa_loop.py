@@ -1,51 +1,9 @@
-"""Shared outer-loop driver for the SA solvers: floor(H/s) full s-step
-groups inside one lax.scan, then ONE remainder tail group of H mod s
-iterations (the group body is shape-parameterized, so the tail is just a
-second trace at a smaller group size). ceil(H/s) Allreduces total,
-exactly H inner iterations, same fold_in iteration ids as the classical
-solvers. H < s degenerates to a single tail group with zero scan trips.
-"""
+"""Compatibility shim: the grouped outer-loop driver moved into the
+generic SA engine (:mod:`repro.core.engine`), which owns all s-step
+scheduling. Import :func:`run_grouped` / :func:`grouped_impl_label`
+from there."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from repro.core.engine import grouped_impl_label, run_grouped
 
-
-def run_grouped(group, carry, H: int, s: int, dtype, start: int = 0):
-    """Run ``group(carry, start, s_grp) -> (carry, objs (s_grp,))`` over
-    the full schedule; returns (carry, objs (H,)).
-
-    ``start`` (a host int) offsets the global iteration ids — a solve
-    resumed from a checkpointed :class:`~repro.core.types.SolveState`
-    at iteration ``start`` passes it here so the groups keep the
-    uninterrupted schedule's ``fold_in`` ids. Checkpoints are taken at
-    outer-iteration boundaries, so ``start`` is a multiple of the
-    original run's s whenever group alignment matters (DESIGN.md
-    "Elastic recovery of SA recurrences")."""
-    K, rem = divmod(H, s)
-    objs = jnp.zeros((0,), dtype)
-    if K:        # full s-step groups
-        carry, objs = jax.lax.scan(
-            lambda c, k: group(c, start + k * s, s), carry, jnp.arange(K))
-        objs = objs.reshape(K * s)
-    if rem:      # remainder tail group: the last H mod s iterations
-        carry, objs_tail = group(carry, jnp.asarray(start + K * s), rem)
-        objs = jnp.concatenate([objs, objs_tail])
-    return carry, objs
-
-
-def grouped_impl_label(impl_fn, H: int, s: int, mu: int,
-                       use_pallas: bool, itemsize: int = 4) -> str:
-    """The inner-loop implementation(s) the grouped schedule actually
-    runs: the tail group dispatches at (H mod s, mu), which can differ
-    from the full groups' (s, mu) — e.g. an over-VMEM s falls back to
-    "ref" while a small tail still runs "pallas". Mixed runs are
-    labeled "main+tail" so benchmarks never mislabel the timings.
-    ``itemsize`` is the solve dtype's bytes/element (the VMEM guards are
-    dtype-aware)."""
-    K, rem = divmod(H, s)
-    labels = ([impl_fn(s, mu, use_pallas, itemsize)] if K else []) \
-        + ([impl_fn(rem, mu, use_pallas, itemsize)] if rem else [])
-    if len(set(labels)) == 1:
-        return labels[0]
-    return "+".join(labels)
+__all__ = ["run_grouped", "grouped_impl_label"]

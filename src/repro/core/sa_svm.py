@@ -1,5 +1,6 @@
 """Synchronization-Avoiding linear SVM — paper Algorithm 4 and its block
-generalization SA-BDCD (after Devarakonda et al., arXiv:1612.04003).
+generalization SA-BDCD (after Devarakonda et al., arXiv:1612.04003),
+expressed as a :class:`repro.core.engine` FamilyProgram.
 
 Unrolls s iterations of (block) dual CD: sample s blocks of mu row
 indices up front, compute the (s*mu) x (s*mu) Gram matrix
@@ -12,58 +13,41 @@ power iteration for mu > 1) — the classical per-iteration Gram-block
 reductions vanish entirely. Deferred primal update:
 x += Y^T (b * theta), ONE local GEMV per outer iteration.
 
-The s dependent inner updates run through ``repro.kernels.svm_inner``:
-a pure-jnp reference on CPU, or (``cfg.use_pallas``) one fused Pallas
-kernel holding all replicated state in VMEM. The path actually taken is
-surfaced in ``SolverResult.aux["inner_impl"]``.
+The s dependent inner updates run through ``repro.kernels.svm_inner``
+(jnp reference, or one fused Pallas kernel per ``cfg.use_pallas``); the
+path taken lands in ``SolverResult.aux["inner_impl"]``.
 
-Same-index collisions across the s blocks of an outer group (paper
-Eq. 14's I_{sk+j}^T I_{sk+t} term) are handled by the eq-matrix gather
-inside the inner loop, and by the Gram cross terms, whose off-diagonal
-blocks hold the raw Y_j Y_t^T even when indices repeat — algebraically
+Same-index collisions across the s blocks (paper Eq. 14's
+I_{sk+j}^T I_{sk+t} term) are handled by the eq-matrix gather in the
+inner loop and by the raw Y_j Y_t^T Gram cross terms — algebraically
 identical to the classical method, see DESIGN.md.
-
-iterations need not divide by s: floor(H/s) full groups run in a scan,
-then ONE remainder group of H mod s iterations finishes the schedule —
-every configuration executes exactly H inner iterations with
-ceil(H/s) Allreduces.
 """
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import linalg
-from repro.core.sa_lasso import _gram_and_proj, _reduce_gram_proj
-from repro.core.sa_loop import grouped_impl_label, run_grouped
-from repro.core.sparse_exec import (prep_operand, row_block_ops,
-                                    spmm_aux)
+from repro.core.engine import (Ctx, FamilyProgram, gram_local,
+                               reduce_gram_proj, run_program)
+from repro.core.sparse_exec import prep_operand, row_block_ops
 from repro.core.types import (SVMProblem, SolveState, SolverConfig,
                               SolverResult, SparseOperand, operand_rmatvec,
-                              require_unit_block, resume_carry)
-from repro.kernels.svm_inner import inner_impl, svm_inner_loop
+                              require_unit_block)
+from repro.kernels.svm_inner import svm_inner_loop
 
 
-def sa_bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
-                axis_name: Optional[object] = None,
-                alpha0=None, state: Optional[SolveState] = None
-                ) -> SolverResult:
-    """s-step unrolled BDCD: identical iterates to ``bdcd_svm`` in exact
-    arithmetic, ONE Allreduce per s inner iterations."""
+def _svm_setup(problem, cfg, axis_name, alpha0, carry0):
     A = prep_operand(problem.A, cfg.dtype)
-    sparse = isinstance(A, SparseOperand)
     take, gram, _, apply_t = row_block_ops(A, cfg)
     b = jnp.asarray(problem.b, cfg.dtype)
     m = A.shape[0]
-    mu = cfg.block_size
     gamma = jnp.asarray(problem.gamma, cfg.dtype)
-    gamma_f, nu_f = float(problem.gamma), float(problem.nu)
-    key = jax.random.key(cfg.seed)
-    s, H = cfg.s, cfg.iterations
-    carry0 = resume_carry(state, alpha0, "sa_bdcd_svm")
-    h0 = 0 if state is None else int(state.iteration)
+    ctx = Ctx(A=A, b=b, m=m, mu=cfg.block_size, gamma=gamma,
+              gamma_f=float(problem.gamma), nu_f=float(problem.nu),
+              sparse=isinstance(A, SparseOperand), take=take, gram=gram,
+              apply_t=apply_t, cfg=cfg, axis_name=axis_name)
 
     if carry0 is not None:
         # resume: carry restored verbatim (no matvec / Allreduce rebuild)
@@ -74,71 +58,86 @@ def sa_bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
         alpha = jnp.zeros((m,), cfg.dtype) if alpha0 is None \
             else jnp.asarray(alpha0, cfg.dtype)
         x = operand_rmatvec(A, b * alpha)                 # line 2 (local)
-        # warm start: resume incremental dual tracking from f_D(alpha0), as
-        # in ``bdcd_svm``, reusing the x just built (zero-start: no
-        # communication).
+        # warm start: resume dual tracking from f_D(alpha0), as in
+        # ``bdcd_svm`` (zero-start: no communication).
         dual0 = jnp.asarray(0.0, cfg.dtype) if alpha0 is None else (
             0.5 * linalg.preduce(jnp.sum(x * x), axis_name)
             + 0.5 * gamma * jnp.sum(alpha * alpha) - jnp.sum(alpha))
+    return ctx, (alpha, x, dual0)
 
-    def group(carry, start, s_grp):
-        """One outer group of s_grp block updates; ``start`` is the
-        (traced) global iteration id preceding the group."""
-        alpha, x, dual = carry
-        # sample the blocks with the same fold_in ids as the non-SA
-        # solver (global iteration ids h = start + j) -> bit-identical
-        # draws.
-        hs = start + 1 + jnp.arange(s_grp)
-        idxs = jax.vmap(
-            lambda h: linalg.sample_block(jax.random.fold_in(key, h),
-                                          m, mu))(hs)     # (s_grp, mu)
-        flat = idxs.reshape(s_grp * mu)
-        Y = take(flat)                                    # (s_grp*mu, n_loc)
-        b_sel = b[flat].reshape(s_grp, mu)                # replicated
-        # --- Communication: ONE fused Allreduce of  Y [Y^T | x] ---
-        if sparse:
-            Graw, P = _reduce_gram_proj(gram(Y, x[:, None]), s_grp * mu,
-                                        1, axis_name, cfg.symmetric_gram)
-        else:
-            Graw, P = _gram_and_proj(Y.T, x[:, None], axis_name,
-                                     symmetric=cfg.symmetric_gram,
-                                     use_pallas=cfg.use_pallas)
-        G = Graw + gamma * jnp.eye(s_grp * mu, dtype=cfg.dtype)  # line 9
-        proj = P[:, 0].reshape(s_grp, mu)                 # line 10: Y x_sk
-        a_vals = alpha[flat].reshape(s_grp, mu)
-        # --- the s_grp dependent inner updates (Alg. 4 lines 11-20) ---
-        theta, deltas = svm_inner_loop(
-            G, proj, b_sel, a_vals, idxs, gamma=gamma_f, nu=nu_f,
-            power_iters=cfg.power_iters, use_pallas=cfg.use_pallas)
-        theta = theta.astype(cfg.dtype)
-        deltas = deltas.astype(cfg.dtype)
-        bt = (b_sel * theta).reshape(s_grp * mu)
-        alpha = alpha.at[flat].add(theta.reshape(s_grp * mu))  # line 20
-        # Deferred primal update (local GEMV): x += Y^T (theta * b_sel).
-        x = x + apply_t(Y, bt)                            # line 21, batched
-        objs = dual + jnp.cumsum(deltas) if cfg.track_objective \
-            else jnp.zeros((s_grp,), cfg.dtype)
-        dual = dual + jnp.sum(deltas)
-        return (alpha, x, dual), objs
 
-    (alpha, x, dual), objs = run_grouped(group, (alpha, x, dual0), H, s,
-                                         cfg.dtype, start=h0)
-    return SolverResult(x=x, objective=objs,
-                        aux={"alpha": alpha, "dual": dual,
-                             "state": SolveState(
-                                 h0 + H,
-                                 {"alpha": alpha, "x": x, "dual": dual}),
-                             "inner_impl": grouped_impl_label(
-                                 inner_impl, H, s, mu, cfg.use_pallas,
-                                 jnp.dtype(cfg.dtype).itemsize),
-                             **spmm_aux(A, cfg, "row_gram", H=H,
-                                        extra=1)})
+def _svm_assemble(ctx, carry, idxs, s_grp):
+    _, x, _ = carry
+    flat = idxs.reshape(s_grp * ctx.mu)
+    Y = ctx.take(flat)                                # (s_grp*mu, n_loc)
+    # LOCAL fused  Y [Y^T | x]  (Alg. 4 lines 9-10, pre-reduce half)
+    local = ctx.gram(Y, x[:, None]) if ctx.sparse \
+        else gram_local(Y.T, x[:, None], ctx.cfg.use_pallas)
+    return Y, local
+
+
+def _svm_reduce(ctx, local, idxs, s_grp):
+    smu = s_grp * ctx.mu
+    Graw, P = reduce_gram_proj(local, smu, 1, ctx.axis_name,
+                               ctx.cfg.symmetric_gram)
+    G = Graw + ctx.gamma * jnp.eye(smu, dtype=ctx.cfg.dtype)  # line 9
+    proj = P[:, 0].reshape(s_grp, ctx.mu)             # line 10: Y x_sk
+    return G, proj
+
+
+def _svm_inner(ctx, carry, Y, payload, idxs, win, s_grp):
+    alpha, x, dual = carry
+    cfg, mu = ctx.cfg, ctx.mu
+    G, proj = payload
+    flat = idxs.reshape(s_grp * mu)
+    b_sel = ctx.b[flat].reshape(s_grp, mu)            # replicated
+    a_vals = alpha[flat].reshape(s_grp, mu)
+    # --- the s_grp dependent inner updates (Alg. 4 lines 11-20) ---
+    theta, deltas = svm_inner_loop(
+        G, proj, b_sel, a_vals, idxs, gamma=ctx.gamma_f, nu=ctx.nu_f,
+        power_iters=cfg.power_iters, use_pallas=cfg.use_pallas)
+    return carry, (theta.astype(cfg.dtype), deltas.astype(cfg.dtype),
+                   b_sel, flat)
+
+
+def _svm_defer(ctx, carry, Y, inner_out, payload, idxs, win, s_grp):
+    alpha, x, dual = carry
+    cfg = ctx.cfg
+    theta, deltas, b_sel, flat = inner_out
+    bt = (b_sel * theta).reshape(s_grp * ctx.mu)
+    alpha = alpha.at[flat].add(theta.reshape(s_grp * ctx.mu))  # line 20
+    # Deferred primal update (local GEMV): x += Y^T (theta * b_sel).
+    x = x + ctx.apply_t(Y, bt)                        # line 21, batched
+    objs = dual + jnp.cumsum(deltas) if cfg.track_objective \
+        else jnp.zeros((s_grp,), cfg.dtype)
+    dual = dual + jnp.sum(deltas)
+    return (alpha, x, dual), objs
+
+
+_BDCD_PROGRAM = FamilyProgram(
+    name="sa_bdcd_svm", setup=_svm_setup,
+    sample=lambda ctx, key: linalg.sample_block(key, ctx.m, ctx.mu),
+    assemble=_svm_assemble, reduce=_svm_reduce, inner=_svm_inner,
+    defer=_svm_defer,
+    finalize=lambda ctx, carry, sched: (
+        carry[1], {"alpha": carry[0], "dual": carry[2]}),
+    carry_names=("alpha", "x", "dual"), uses_svm_inner=True,
+    spmm_kind="row_gram", spmm_extra=1)
+
+
+def sa_bdcd_svm(problem: SVMProblem, cfg: SolverConfig,
+                axis_name: Optional[object] = None,
+                alpha0=None, state: Optional[SolveState] = None
+                ) -> SolverResult:
+    """s-step unrolled BDCD: identical iterates to ``bdcd_svm`` in exact
+    arithmetic, ONE Allreduce per s inner iterations."""
+    return run_program(_BDCD_PROGRAM, problem, cfg, axis_name, alpha0,
+                       state)
 
 
 def sa_svm(problem: SVMProblem, cfg: SolverConfig,
            axis_name: Optional[object] = None,
            alpha0=None, state: Optional[SolveState] = None) -> SolverResult:
-    """Paper Algorithm 4: the block_size = 1 special case of
-    ``sa_bdcd_svm``."""
+    """Paper Algorithm 4: the block_size = 1 case of ``sa_bdcd_svm``."""
     require_unit_block(cfg, "sa_svm")
     return sa_bdcd_svm(problem, cfg, axis_name, alpha0, state)

@@ -20,6 +20,9 @@ from repro.api import FAMILIES, KERNELS, SolverConfig
 
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--list-families", action="store_true",
+                    help="print every registered problem family (variants, "
+                         "sharded partition axis, autotuner grid) and exit")
     ap.add_argument("--problem", choices=sorted(FAMILIES), default="lasso")
     ap.add_argument("--dataset", default="news20-like")
     # default mu: per family (lasso 8, svm 1 = paper Alg. 3-4, ...); pass
@@ -111,8 +114,29 @@ def _elastic_kwargs(args):
     }
 
 
+def list_families() -> str:
+    """One block per registered family, straight from the registry — a
+    family added via ``register_family`` shows up with zero launcher
+    edits (the same contract as ``--problem`` itself)."""
+    lines = []
+    for name in sorted(FAMILIES):
+        fam = FAMILIES[name]
+        variants = ", ".join(f"{k} -> {v}" if isinstance(v, str) else k
+                             for k, v in sorted(fam.variants.items()))
+        grid = ", ".join(f"{k}={list(v)}"
+                         for k, v in sorted(fam.tune_space.items()))
+        lines += [f"{name}  ({fam.problem_cls.__name__}, "
+                  f"partition={fam.partition}, default_mu={fam.default_mu})",
+                  f"    variants:   {variants}",
+                  f"    tune_space: {grid or '(autotuner: family default)'}"]
+    return "\n".join(lines)
+
+
 def main(argv=None):
     args = build_parser().parse_args(argv)
+    if args.list_families:
+        print(list_families())
+        return
     family = FAMILIES[args.problem]
     if args.mu is None:
         args.mu = family.default_mu

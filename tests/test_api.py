@@ -23,10 +23,11 @@ from repro import api
 from repro.api import (FAMILIES, LassoProblem, LogRegProblem, ProblemFamily,
                        SVMProblem, SolverConfig, register_family)
 from repro.core import (acc_bcd_lasso, acc_cd_lasso, bcd_lasso, bcd_logreg,
-                        bdcd_svm, cd_lasso, dcd_svm, kbdcd_svm,
+                        bdcd_svm, ca_sfista, cd_lasso, dcd_svm, kbdcd_svm,
                         sa_acc_bcd_lasso, sa_acc_cd_lasso, sa_bcd_lasso,
                         sa_bcd_logreg, sa_bdcd_svm, sa_cd_lasso, sa_kbdcd_svm,
-                        sa_svm)
+                        sa_svm, sfista)
+from repro.core.sfista import SFISTAProblem
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 ROOT = os.path.join(os.path.dirname(__file__), "..")
@@ -41,6 +42,7 @@ def _problems(lasso_data, svm_data):
         "ksvm": SVMProblem(A=As, b=bs, lam=1.0, kernel="rbf",
                            kernel_params={"gamma": 0.1}),
         "logreg": LogRegProblem(A=As, b=bs, lam=1e-3),
+        "sfista": SFISTAProblem(A=A, b=b, lam=lam),
     }
 
 
@@ -60,6 +62,8 @@ LOCAL_CASES = [
     ("ksvm", sa_kbdcd_svm, dict(block_size=2, s=8)),
     ("logreg", bcd_logreg, dict(block_size=2, s=1)),
     ("logreg", sa_bcd_logreg, dict(block_size=2, s=8)),
+    ("sfista", sfista, dict(block_size=4, s=1)),
+    ("sfista", ca_sfista, dict(block_size=4, s=8)),
 ]
 
 
@@ -83,8 +87,8 @@ def test_family_resolution_by_problem_type(lasso_data, svm_data):
         assert api.resolve_family(prob).name == name
 
 
-def test_registry_has_all_four_families():
-    assert {"lasso", "svm", "ksvm", "logreg"} <= set(FAMILIES)
+def test_registry_has_all_families():
+    assert {"lasso", "svm", "ksvm", "logreg", "sfista"} <= set(FAMILIES)
     assert api.families() == tuple(sorted(FAMILIES))
 
 
@@ -339,7 +343,8 @@ def test_api_surface_matches_checked_in():
     assert out.returncode == 0, (out.stdout, out.stderr)
 
 
-@pytest.mark.parametrize("family", ["lasso", "svm", "ksvm", "logreg"])
+@pytest.mark.parametrize("family", ["lasso", "svm", "ksvm", "logreg",
+                                    "sfista"])
 def test_cli_smoke_per_family(family):
     env = dict(os.environ, PYTHONPATH=SRC)
     out = subprocess.run(
