@@ -1,13 +1,21 @@
-"""Structural verification of the SA claim on the compiled artifacts:
-count collectives (static ops x scan trip counts) in the distributed
-solver HLO for several s — for EVERY registered problem family (the
-list comes from ``repro.api.FAMILIES``, so a newly registered family is
-verified here with zero benchmark edits). This is the dry-run analogue
-of the paper's latency measurements: runtime messages per solve =
-static collectives x trips.
+"""Structural verification of the SA claim — now via ``repro.analysis``.
 
-Runs in a subprocess with 8 placeholder devices (the bench process keeps
-1 device).
+Two complementary views, for EVERY registered problem family (the list
+comes from the registry, so a newly registered family is verified here
+with zero benchmark edits):
+
+  * **static (in-process)** — ``repro.analysis.solver_collective_budget``
+    walks the traced jaxpr and reports, per family x s: the in-loop
+    collective counts by type, the all-reduce payload bytes per OUTER
+    iteration, and runtime messages per solve (= in-loop all-reduces x
+    outer trips). This is the dry-run analogue of the paper's latency
+    measurements and needs no devices at all.
+  * **compiled (subprocess, 8 placeholder devices)** — the post-SPMD
+    HLO of the same lowering, parsed with
+    ``repro.roofline.analysis.collective_stats_from_hlo``, cross-checks
+    that XLA kept exactly the collectives the jaxpr promised (the bench
+    process keeps 1 device; forcing devices needs XLA_FLAGS before jax
+    imports, hence the subprocess).
 """
 import os
 import re
@@ -18,17 +26,18 @@ from benchmarks.common import emit
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
+H = 64
+S_VALUES = (1, 4, 16)
+
 CODE = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import re, jax
+import jax
 from repro.core import api
 from repro.core.types import FAMILIES, SolverConfig
-from repro.roofline.analysis import collective_bytes_from_hlo
+from repro.roofline.analysis import collective_stats_from_hlo
 
 H = 64
-# representative shapes per partition layout: row-partitioned families
-# shard data points, column-partitioned ones shard features.
 SHAPES = {"row": (512, 128), "col": (256, 512)}
 meshes = {}
 for name in sorted(FAMILIES):
@@ -43,48 +52,80 @@ for name in sorted(FAMILIES):
                            s=s, track_objective=False)
         txt = api.lower_solve(name, cfg, meshes[axis], m=m, n=n,
                               axes=axis).compile().as_text()
-        static = len(re.findall(r"= \S+ all-reduce\(", txt))
-        trips = H // s
-        bytes_ = collective_bytes_from_hlo(txt)["total"]
-        print(f"{name.upper()} s={s} static={static} trips={trips} "
-              f"runtime_msgs={static * trips} bytes_per_outer={bytes_}")
+        stats = collective_stats_from_hlo(txt)
+        others = stats.total_count - stats.counts["all-reduce"]
+        print(f"{name.upper()} s={s} "
+              f"compiled_allreduce={stats.counts['all-reduce']} "
+              f"compiled_other={others}")
 """
 
 
+def static_rows():
+    """The jaxpr-level budget, in-process (1 device is enough: the
+    trace is symbolic)."""
+    sys.path.insert(0, SRC)
+    from repro.analysis import solver_collective_budget
+    from repro.core.types import FAMILIES, SolverConfig
+    shapes = {"row": (512, 128), "col": (256, 512)}
+    rows = {}
+    for name in sorted(FAMILIES):
+        fam = FAMILIES[name]
+        m, n = shapes[fam.partition]
+        for s in S_VALUES:
+            cfg = SolverConfig(block_size=fam.bench_block_size,
+                               iterations=H, s=s, track_objective=False)
+            budget = solver_collective_budget(fam, cfg, m=m, n=n)
+            rows[(name, s)] = budget
+    return rows
+
+
 def main():
+    rows = static_rows()
+    kinds = sorted({name for name, _ in rows})
+    msgs = {}
+    for (name, s), budget in sorted(rows.items()):
+        static = budget.per_iteration["all-reduce"]
+        others = sum(v for k, v in budget.total.items()
+                     if k != "all-reduce")
+        trips = -(-H // s)
+        msgs[(name, s)] = static * trips
+        emit(f"collective_count/{name}/s{s}", 0.0,
+             f"static={static};other_collectives={others};trips={trips};"
+             f"runtime_msgs={static * trips};"
+             f"bytes_per_outer={budget.per_iteration_bytes:.0f}")
+    for name in kinds:
+        red = msgs[(name, 1)] / max(msgs[(name, 16)], 1)
+        emit(f"collective_count/{name}/reduction_s16", 0.0,
+             f"latency_reduction={red:.1f}x(expected~16x)")
+    # the SA claim, structurally: ONE in-loop Allreduce per outer
+    # iteration and zero other collectives, for every registered family.
+    worst = max(b.per_iteration["all-reduce"] for b in rows.values())
+    extra = max(sum(v for k, v in b.total.items() if k != "all-reduce")
+                for b in rows.values())
+    emit("collective_count/one_allreduce_per_outer", 0.0,
+         f"max_static={worst};max_other={extra};families={len(kinds)};"
+         f"ok={worst == 1 and extra == 0}")
+
+    # cross-check against the compiled 8-device artifacts.
     env = dict(os.environ, PYTHONPATH=SRC)
     out = subprocess.run([sys.executable, "-c", CODE], env=env,
                          capture_output=True, text=True, timeout=1800)
     if out.returncode != 0:
-        emit("collective_count/ERROR", 0.0, out.stderr[-300:].replace(
-            "\n", " ")[:200])
+        emit("collective_count/compiled/ERROR", 0.0,
+             out.stderr[-300:].replace("\n", " ")[:200])
         return
-    rows = {}
-    statics = {}
-    kinds = []
+    agree = True
     for line in out.stdout.splitlines():
-        m = re.match(r"([A-Z]+) s=(\d+) static=(\d+) trips=(\d+) "
-                     r"runtime_msgs=(\d+) bytes_per_outer=(\d+)", line)
+        m = re.match(r"([A-Z]+) s=(\d+) compiled_allreduce=(\d+) "
+                     r"compiled_other=(\d+)", line)
         if m:
-            kind, s, static, trips, msgs, bytes_ = m.groups()
-            if kind not in kinds:
-                kinds.append(kind)
-            rows[(kind, int(s))] = int(msgs)
-            statics[(kind, int(s))] = int(static)
-            emit(f"collective_count/{kind.lower()}/s{s}", 0.0,
-                 f"static={static};trips={trips};runtime_msgs={msgs};"
-                 f"bytes_per_outer={bytes_}")
-    for kind in kinds:
-        if (kind, 1) in rows and (kind, 16) in rows:
-            red = rows[(kind, 1)] / max(rows[(kind, 16)], 1)
-            emit(f"collective_count/{kind.lower()}/reduction_s16", 0.0,
-                 f"latency_reduction={red:.1f}x(expected~16x)")
-    # the SA claim, structurally: ONE Allreduce per outer iteration,
-    # for every registered family.
-    if statics:
-        worst = max(statics.values())
-        emit("collective_count/one_allreduce_per_outer", 0.0,
-             f"max_static={worst};families={len(kinds)};ok={worst == 1}")
+            kind, s, ar, other = m.groups()
+            budget = rows[(kind.lower(), int(s))]
+            want = sum(budget.total.values())
+            agree &= int(ar) + int(other) == want
+            emit(f"collective_count/{kind.lower()}/s{s}/compiled", 0.0,
+                 f"allreduce={ar};other={other};jaxpr_total={want}")
+    emit("collective_count/compiled_matches_jaxpr", 0.0, f"ok={agree}")
 
 
 if __name__ == "__main__":

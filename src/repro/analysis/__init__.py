@@ -1,0 +1,82 @@
+"""repro.analysis — static contract analyzer for the SA solvers.
+
+Four passes, each enumerating the ``FAMILIES`` registry (so new
+families and variants are covered with zero analyzer edits):
+
+  * ``collectives``  — exactly ONE all-reduce per outer iteration,
+    nothing else, with payload bytes reported (``collectives.py``);
+  * ``replication``  — every output the sharded solve declares
+    replicated is provably shard-invariant (taint analysis,
+    ``replication.py``);
+  * ``dtypes``       — no silent f64 -> f32 narrowing in an f64 trace
+    (``dtypes.py``);
+  * ``lint``         — AST repo lint (raw collectives, ambient RNG,
+    bare asserts) plus the registry carry/state-layout contract
+    (``lint.py``).
+
+Entry points: :func:`check_all` in-process, ``python -m repro.analysis``
+on the command line, ``tools/sa_lint.py`` for the lint rules alone, and
+the pytest tier ``-m analysis``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.analysis.collectives import (COLLECTIVE_PRIMS, CollectiveBudget,
+                                        check_collectives, collective_budget,
+                                        solver_collective_budget)
+from repro.analysis.common import (AnalysisReport, Diagnostic, SEVERITIES,
+                                   family_variants, variant_config)
+from repro.analysis.dtypes import check_dtypes, find_float_narrowing
+from repro.analysis.lint import check_registry, lint_paths, lint_source
+from repro.analysis.replication import (check_replication,
+                                        shard_map_out_taints, taint_jaxpr)
+
+CHECKS = ("collectives", "replication", "dtypes", "lint", "registry")
+
+__all__ = [
+    "AnalysisReport", "CHECKS", "COLLECTIVE_PRIMS", "CollectiveBudget",
+    "Diagnostic", "SEVERITIES", "check_all", "check_collectives",
+    "check_dtypes", "check_registry", "check_replication",
+    "collective_budget", "family_variants", "find_float_narrowing",
+    "lint_paths", "lint_source", "shard_map_out_taints",
+    "solver_collective_budget", "taint_jaxpr", "variant_config",
+]
+
+
+def check_all(checks: Optional[Sequence[str]] = None,
+              families: Optional[Sequence[str]] = None) -> AnalysisReport:
+    """Run the selected passes (default: all) over the selected
+    registered families (default: all) and merge the findings."""
+    from repro.core.types import FAMILIES
+    checks = tuple(checks or CHECKS)
+    unknown = set(checks) - set(CHECKS)
+    if unknown:
+        raise ValueError(f"unknown checks {sorted(unknown)}; "
+                         f"available: {CHECKS}")
+    fams = []
+    for name in families or sorted(FAMILIES):
+        if name not in FAMILIES:
+            raise ValueError(f"unknown family {name!r}; registered: "
+                             f"{sorted(FAMILIES)}")
+        fams.append(FAMILIES[name])
+
+    report = AnalysisReport()
+    per_family = {"collectives": check_collectives,
+                  "replication": check_replication,
+                  "dtypes": check_dtypes}
+    for check in checks:
+        if check in per_family:
+            for fam in fams:
+                diags, checked = per_family[check](fam)
+                report.extend(diags)
+                report.checked.extend(f"{check}:{c}" for c in checked)
+        elif check == "lint":
+            diags, checked = lint_paths()
+            report.extend(diags)
+            report.checked.extend(f"lint:{c}" for c in checked)
+        elif check == "registry":
+            diags, checked = check_registry()
+            report.extend(diags)
+            report.checked.extend(f"registry:{c}" for c in checked)
+    return report

@@ -1,0 +1,37 @@
+"""CLI: ``python -m repro.analysis [--checks ...] [--families ...]``.
+
+Runs the static contract analyzer and exits 1 if any pass reports an
+error — the CI "Static analysis" job is exactly this invocation.
+``-v`` additionally prints the info diagnostics (the per-variant
+all-reduce payload bytes).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import CHECKS, check_all
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static contract analysis of the SA solvers.")
+    parser.add_argument("--checks", nargs="+", choices=CHECKS,
+                        default=None, metavar="CHECK",
+                        help=f"subset of passes to run (default: all of "
+                             f"{', '.join(CHECKS)})")
+    parser.add_argument("--families", nargs="+", default=None,
+                        metavar="FAMILY",
+                        help="subset of registered families (default: all)")
+    parser.add_argument("-v", "--verbose", action="store_true",
+                        help="also print info diagnostics (payload bytes)")
+    args = parser.parse_args(argv)
+
+    report = check_all(checks=args.checks, families=args.families)
+    print(report.format(verbose=args.verbose))
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

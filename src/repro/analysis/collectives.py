@@ -1,0 +1,220 @@
+"""Static collective-budget verification.
+
+The paper's structural invariant — every outer iteration of an SA
+solver issues exactly ONE fused Allreduce of the (s·mu)² Gram /
+(m, s·mu) cross block and nothing else (Table I; the same contract in
+the primal/dual BCD precursor arXiv:1612.04003 and the CA-proximal line
+arXiv:1710.08883) — was only checked dynamically, by the 8-device
+subprocess rows of ``benchmarks/collective_count.py``. This pass checks
+it at lowering time, in-process, for every registered family×variant:
+
+  * trace the FULL sharded solve (``repro.core.api.trace_sharded`` —
+    the same shard_map program ``solve_sharded`` runs, state leaves
+    included) on a 1-device mesh: the jaxpr carries every collective
+    primitive symbolically, regardless of how many devices this host
+    exposes;
+  * walk the jaxpr recursively and split collective eqns into
+    ``per_iteration`` (inside a scan/while body — issued once per outer
+    iteration) and ``amortized`` (outside every loop — setup work and
+    the remainder tail group, issued once per solve);
+  * assert the budget: exactly one in-loop all-reduce, zero in-loop
+    all-gather / all-to-all / reduce-scatter / collective-permute, and
+    no amortized collectives beyond the remainder tail's own single
+    all-reduce.
+
+Bytes ride along: each all-reduce's payload size falls out of the eqn
+output avals, giving the bytes-per-outer-iteration column the
+compressed-collectives roadmap item needs — without compiling anything.
+When >= 2 devices are available the pass can additionally cross-check
+the compiled post-SPMD HLO text through the hardened
+``repro.roofline.analysis.collective_stats_from_hlo`` parser.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.analysis.common import (Diagnostic, bench_shape, family_variants,
+                                   variant_config)
+from repro.core.types import ProblemFamily, SolverConfig
+
+# jaxpr collective primitive -> the HLO-side op name the roofline parser
+# and the benchmarks report (one shared vocabulary).
+COLLECTIVE_PRIMS = {
+    "psum": "all-reduce",
+    "all_gather": "all-gather",
+    "reduce_scatter": "reduce-scatter",
+    "all_to_all": "all-to-all",
+    "ppermute": "collective-permute",
+}
+
+_LOOP_PRIMS = ("scan", "while")
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveBudget:
+    """Counts and all-reduce payload bytes of one traced solve, split by
+    where the op sits in the loop structure.
+
+    per_iteration: collectives inside a scan/while body — issued once
+        per outer iteration (the budgeted hot path).
+    amortized: collectives outside every loop — setup (e.g. a warm
+        start's margin rebuild) plus the remainder tail group, issued
+        once per solve.
+    per_iteration_bytes / amortized_bytes: summed result bytes of the
+        corresponding all-reduces (the fused payload the compressed-
+        collectives work quantizes).
+    """
+
+    per_iteration: Dict[str, int]
+    amortized: Dict[str, int]
+    per_iteration_bytes: float
+    amortized_bytes: float
+
+    @property
+    def total(self) -> Dict[str, int]:
+        return {k: self.per_iteration[k] + self.amortized[k]
+                for k in COLLECTIVE_PRIMS.values()}
+
+
+def _subjaxprs(eqn):
+    """Every sub-jaxpr stashed in an eqn's params (scan/while/cond/
+    pjit/custom_* all keep theirs under different keys — scan the values
+    so an unanticipated higher-order primitive is still walked)."""
+    from jax._src import core as jcore
+    for val in eqn.params.values():
+        vals = val if isinstance(val, (list, tuple)) else (val,)
+        for v in vals:
+            if isinstance(v, jcore.ClosedJaxpr):
+                yield v.jaxpr
+            elif isinstance(v, jcore.Jaxpr):
+                yield v
+
+
+def _aval_bytes(var) -> float:
+    aval = var.aval
+    return float(np.prod(aval.shape, dtype=np.int64) if aval.shape else 1) \
+        * np.dtype(aval.dtype).itemsize
+
+
+def collective_budget(closed_jaxpr) -> CollectiveBudget:
+    """Walk a (Closed)Jaxpr recursively and classify every collective
+    primitive as per-iteration (inside any scan/while body) or
+    amortized (outside all loops)."""
+    per = {k: 0 for k in COLLECTIVE_PRIMS.values()}
+    amo = {k: 0 for k in COLLECTIVE_PRIMS.values()}
+    nbytes = {"per": 0.0, "amo": 0.0}
+
+    def walk(jaxpr, in_loop: bool) -> None:
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            if name in COLLECTIVE_PRIMS:
+                op = COLLECTIVE_PRIMS[name]
+                bucket = per if in_loop else amo
+                bucket[op] += 1
+                if op == "all-reduce":
+                    nbytes["per" if in_loop else "amo"] += sum(
+                        _aval_bytes(v) for v in eqn.outvars)
+            inner_loop = in_loop or name in _LOOP_PRIMS
+            for sub in _subjaxprs(eqn):
+                walk(sub, inner_loop)
+
+    jaxpr = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+    walk(jaxpr, in_loop=False)
+    return CollectiveBudget(per_iteration=per, amortized=amo,
+                            per_iteration_bytes=nbytes["per"],
+                            amortized_bytes=nbytes["amo"])
+
+
+def solver_collective_budget(fam: ProblemFamily, cfg: SolverConfig,
+                             mesh=None, m: Optional[int] = None,
+                             n: Optional[int] = None,
+                             dtype=None) -> CollectiveBudget:
+    """The collective budget of one family×config sharded solve. A
+    1-device mesh (the default) is enough — the jaxpr is structurally
+    identical for any axis size."""
+    from repro.core import api
+    import jax.numpy as jnp
+    if mesh is None:
+        axis = fam.default_axes if isinstance(fam.default_axes, str) \
+            else fam.default_axes[0]
+        mesh = jax.make_mesh((1,), (axis,))
+    bm, bn = bench_shape(fam)
+    traced = api.trace_sharded(fam, cfg, mesh, m=m or bm, n=n or bn,
+                               dtype=dtype or jnp.float32)
+    return collective_budget(traced.jaxpr)
+
+
+def check_collectives(fam: ProblemFamily,
+                      variants: Optional[Tuple[str, ...]] = None,
+                      mesh=None, iterations: int = 16
+                      ) -> Tuple[List[Diagnostic], List[str]]:
+    """Assert the per-outer-iteration collective budget for every
+    registered variant of ``fam``: exactly ONE in-loop all-reduce,
+    nothing else in-loop, and no amortized collectives (H is chosen
+    divisible by s so there is no tail group; with a remainder the tail
+    contributes exactly one more amortized all-reduce, which
+    :func:`collective_budget` callers can allow explicitly).
+
+    Returns (diagnostics, checked-subject names). Per-variant payload
+    bytes are reported as "info" diagnostics either way.
+    """
+    diags: List[Diagnostic] = []
+    checked: List[str] = []
+    for variant in variants or family_variants(fam):
+        where = f"{fam.name}:{variant}"
+        checked.append(where)
+        cfg = variant_config(fam, variant, iterations=iterations)
+        budget = solver_collective_budget(fam, cfg, mesh=mesh)
+        outer = cfg.outer_iterations
+        ar = budget.per_iteration["all-reduce"]
+        if ar != 1:
+            diags.append(Diagnostic(
+                "collectives", "error", where,
+                f"expected exactly ONE all-reduce per outer iteration, "
+                f"found {ar} inside the outer loop body (s={cfg.s}, "
+                f"mu={cfg.block_size}) — the SA contract (Table I) is "
+                f"one fused Gram/cross Allreduce and nothing else"))
+        for op, count in budget.per_iteration.items():
+            if op != "all-reduce" and count:
+                diags.append(Diagnostic(
+                    "collectives", "error", where,
+                    f"{count} in-loop {op} op(s): the SA solvers must "
+                    f"not {op} — every exchanged value rides the one "
+                    f"fused all-reduce"))
+        extra_amortized = dict(budget.amortized)
+        if sum(extra_amortized.values()):
+            ops = {k: v for k, v in extra_amortized.items() if v}
+            diags.append(Diagnostic(
+                "collectives", "error", where,
+                f"amortized (outside-loop) collectives {ops} with no "
+                f"remainder tail (H={cfg.iterations} divisible by "
+                f"s={cfg.s}): setup must not communicate for a "
+                f"zero-initialized solve"))
+        diags.append(Diagnostic(
+            "collectives", "info", where,
+            f"all-reduce payload {budget.per_iteration_bytes:.0f} B per "
+            f"outer iteration x {outer} outer iterations "
+            f"(runtime messages = {outer})"))
+    return diags, checked
+
+
+def compiled_collective_stats(fam: ProblemFamily, cfg: SolverConfig,
+                              mesh, m: Optional[int] = None,
+                              n: Optional[int] = None):
+    """Cross-check: the compiled post-SPMD HLO of the same lowering,
+    parsed with the hardened roofline parser. Needs a REAL multi-device
+    mesh (XLA removes single-participant collectives during
+    compilation); returns a
+    :class:`repro.roofline.analysis.CollectiveStats` whose static
+    all-reduce count is 1 per distinct group trace (scan bodies count
+    once)."""
+    from repro.core import api
+    from repro.roofline.analysis import collective_stats_from_hlo
+    bm, bn = bench_shape(fam)
+    txt = api.lower_solve(fam, cfg, mesh, m=m or bm * 8, n=n or bn * 8
+                          ).compile().as_text()
+    return collective_stats_from_hlo(txt)

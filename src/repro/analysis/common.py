@@ -1,0 +1,124 @@
+"""Shared vocabulary of the static contract analyzer: diagnostics, the
+report container, and the family-variant enumeration every pass uses.
+
+Each pass (``collectives``, ``replication``, ``dtypes``, ``lint``)
+returns a flat list of :class:`Diagnostic`; ``repro.analysis.check_all``
+merges them into one :class:`AnalysisReport`. A diagnostic names its
+pass, what it examined (``family:variant`` for the jaxpr passes,
+``path:line`` for the repo lint) and the violated contract — so a CI
+failure reads as "which invariant broke where", not a stack trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Tuple
+
+from repro.core.types import ProblemFamily, SolverConfig
+
+SEVERITIES = ("error", "warning", "info")
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One finding of one analysis pass.
+
+    check:    the pass ("collectives", "replication", "dtypes", "lint",
+              "registry").
+    severity: "error" fails the analysis; "warning" is reported but
+              non-fatal; "info" carries measurements (e.g. the bytes
+              per outer iteration the compressed-collectives work
+              needs).
+    where:    "family:variant" for solver passes, "path:line" for the
+              repo lint.
+    message:  the violated contract (or the measurement), human-first.
+    """
+
+    check: str
+    severity: str
+    where: str
+    message: str
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(
+                f"severity must be one of {SEVERITIES}, "
+                f"got {self.severity!r}")
+
+    def format(self) -> str:
+        return f"[{self.check}] {self.severity}: {self.where}: " \
+               f"{self.message}"
+
+
+@dataclasses.dataclass
+class AnalysisReport:
+    """All diagnostics of one analyzer run plus what it covered."""
+
+    diagnostics: List[Diagnostic] = dataclasses.field(default_factory=list)
+    checked: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def errors(self) -> List[Diagnostic]:
+        return [d for d in self.diagnostics if d.severity == "error"]
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def extend(self, diags: Iterable[Diagnostic]) -> None:
+        self.diagnostics.extend(diags)
+
+    def format(self, verbose: bool = False) -> str:
+        lines = []
+        for d in self.diagnostics:
+            if verbose or d.severity != "info":
+                lines.append(d.format())
+        lines.append(
+            f"{len(self.checked)} subjects checked, "
+            f"{len(self.errors)} error(s), "
+            f"{sum(d.severity == 'warning' for d in self.diagnostics)} "
+            f"warning(s)")
+        return "\n".join(lines)
+
+
+def variant_config(fam: ProblemFamily, variant: str,
+                   iterations: int = 16, **overrides) -> SolverConfig:
+    """The SolverConfig under which ``fam.solve`` dispatches to the
+    named registered variant: SA variants ("sa*", "ca*") get s = 8,
+    classical ones s = 1; "accelerated" in the name toggles
+    ``cfg.accelerated``. ``iterations`` defaults to a multiple of s so
+    the lowering has no remainder tail group (the one-collective-per-
+    outer budget is then exactly one in-loop all-reduce); pass an
+    indivisible H to analyze the tail path too.
+
+    ``track_objective`` is off — objective tracking legitimately adds
+    one reduction per inner iteration in the row-partitioned families
+    (a diagnostic, outside the paper's Table I contract), exactly as
+    the dynamic ``benchmarks/collective_count.py`` rows measure it.
+    """
+    if variant not in fam.variants:
+        raise ValueError(
+            f"unknown variant {variant!r} for family {fam.name!r}; "
+            f"registered: {sorted(fam.variants)}")
+    kw = dict(
+        block_size=fam.bench_block_size,
+        s=8 if variant.startswith(("sa", "ca")) else 1,
+        accelerated="accelerated" in variant,
+        iterations=iterations,
+        track_objective=False,
+    )
+    kw.update(overrides)
+    return SolverConfig(**kw)
+
+
+def family_variants(fam: ProblemFamily) -> Tuple[str, ...]:
+    """The family's registered variant names, sorted — the enumeration
+    axis of every solver pass (a new variant is analyzed with zero
+    analyzer edits, exactly like a new family)."""
+    return tuple(sorted(fam.variants))
+
+
+def bench_shape(fam: ProblemFamily) -> Tuple[int, int]:
+    """A small representative (m, n) per partition layout — row-
+    partitioned families shard data points, column-partitioned ones
+    shard features (mirrors benchmarks/collective_count.py)."""
+    return (64, 32) if fam.partition == "row" else (32, 64)

@@ -1,0 +1,226 @@
+"""Repo lint: AST rules for the library source plus the registry
+contract check.
+
+Three AST rules over ``src/repro`` (tests and benchmarks are exempt —
+they legitimately poke internals):
+
+  * **raw-collective** — no direct ``jax.lax.psum`` / ``all_gather`` /
+    ``ppermute`` / ... outside the blessed call sites. Every solver
+    communicates through ``repro.core.linalg.preduce`` (so compression
+    and the collective budget stay centralized); the allowlist is the
+    wrapper itself, the engine, the compression layer that implements
+    the wire format, and the microbenchmark that measures raw
+    collective latency.
+  * **ambient-rng** — no stdlib ``random`` and no ``np.random.*``
+    global-state calls (``seed``/``rand``/``randn``/...) anywhere in
+    the library: solver sampling must flow through keyed
+    ``jax.random`` so runs are reproducible and shard-deterministic.
+    ``np.random.default_rng`` (explicit generator object) is allowed
+    only in the data/launch layers and the microbench timer.
+  * **bare-assert** — no ``assert`` statements in library code:
+    ``python -O`` strips them, so input validation must raise
+    ``ValueError`` (the repo's established convention; see
+    ``SolverConfig.__post_init__``).
+
+Plus one runtime contract check:
+
+  * **registry** — every module-level :class:`FamilyProgram` backing a
+    registered family must have ``carry_names`` matching the family's
+    ``state_layout(cfg)`` leaf names for at least one registered cfg
+    shape, or checkpoints written by the engine cannot be restored by
+    the drivers (``SolveState`` leaves are keyed by name).
+"""
+from __future__ import annotations
+
+import ast
+import inspect
+import pathlib
+from typing import Iterable, List, Optional, Tuple
+
+from repro.analysis.common import Diagnostic, variant_config
+
+COLLECTIVE_FNS = frozenset({
+    "psum", "pmean", "pmax", "pmin", "all_gather", "ppermute",
+    "all_to_all", "psum_scatter", "pshuffle",
+})
+
+# repo-relative (to src/repro) files allowed to touch raw collectives:
+# the preduce wrapper, the engine's schedule-free fallback, the
+# compressed wire format, and the collective microbenchmark.
+RAW_COLLECTIVE_ALLOW = frozenset({
+    "core/linalg.py", "core/engine.py", "optim/compress.py",
+    "tune/microbench.py",
+})
+
+# files/dirs (relative to src/repro) allowed to build explicit
+# np.random.default_rng generators: synthetic data, the serving demo
+# and the microbench timer. Global-state np.random.* is allowed nowhere.
+DEFAULT_RNG_ALLOW_DIRS = ("data/", "launch/")
+DEFAULT_RNG_ALLOW_FILES = frozenset({"tune/microbench.py"})
+
+_NP_NAMES = frozenset({"np", "numpy"})
+_RNG_GLOBAL_OK = frozenset({"default_rng", "Generator", "RandomState",
+                            "SeedSequence", "BitGenerator", "Philox",
+                            "PCG64"})
+
+
+def _attr_chain(node) -> List[str]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return parts[::-1]
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, rel: str):
+        self.rel = rel
+        self.diags: List[Diagnostic] = []
+        self._psum_ok = rel in RAW_COLLECTIVE_ALLOW
+        self._rng_ok = rel in DEFAULT_RNG_ALLOW_FILES or any(
+            rel.startswith(d) for d in DEFAULT_RNG_ALLOW_DIRS)
+
+    def _emit(self, rule: str, node: ast.AST, msg: str) -> None:
+        self.diags.append(Diagnostic(
+            "lint", "error", f"{self.rel}:{node.lineno}",
+            f"[{rule}] {msg}"))
+
+    # -- raw collectives ------------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        chain = _attr_chain(node.func)
+        if chain:
+            leaf = chain[-1]
+            if leaf in COLLECTIVE_FNS and not self._psum_ok and (
+                    len(chain) == 1 or chain[-2] == "lax"):
+                self._emit(
+                    "raw-collective", node,
+                    f"direct jax.lax.{leaf} call — solvers must "
+                    f"communicate via repro.core.linalg.preduce so "
+                    f"compression and the collective budget stay "
+                    f"centralized")
+            if len(chain) >= 3 and chain[0] in _NP_NAMES \
+                    and chain[1] == "random":
+                fn = chain[2]
+                if fn not in _RNG_GLOBAL_OK:
+                    self._emit(
+                        "ambient-rng", node,
+                        f"np.random.{fn} uses numpy's ambient global "
+                        f"RNG state — library code must take a keyed "
+                        f"jax PRNG (or an explicit Generator in the "
+                        f"data layer)")
+                elif not self._rng_ok:
+                    self._emit(
+                        "ambient-rng", node,
+                        f"np.random.{fn} outside the data/launch/"
+                        f"microbench layers — solver-side randomness "
+                        f"must be keyed jax.random for shard-"
+                        f"deterministic sampling")
+        self.generic_visit(node)
+
+    # -- stdlib random --------------------------------------------------
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            if alias.name == "random" or alias.name.startswith("random."):
+                self._emit("ambient-rng", node,
+                           "stdlib random is ambient global state — "
+                           "use keyed jax.random")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module == "random":
+            self._emit("ambient-rng", node,
+                       "stdlib random is ambient global state — "
+                       "use keyed jax.random")
+        if node.module == "jax.lax" and not self._psum_ok:
+            for alias in node.names:
+                if alias.name in COLLECTIVE_FNS:
+                    self._emit(
+                        "raw-collective", node,
+                        f"importing {alias.name} from jax.lax — "
+                        f"communicate via repro.core.linalg.preduce")
+        self.generic_visit(node)
+
+    # -- bare assert ----------------------------------------------------
+    def visit_Assert(self, node: ast.Assert) -> None:
+        self._emit("bare-assert", node,
+                   "bare assert is stripped under python -O — raise "
+                   "ValueError for input validation")
+        self.generic_visit(node)
+
+
+def lint_source(source: str, rel: str) -> List[Diagnostic]:
+    """Lint one module's source text; ``rel`` is its path relative to
+    the package root (``src/repro``)."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as exc:
+        return [Diagnostic("lint", "error", f"{rel}:{exc.lineno or 0}",
+                           f"[syntax] {exc.msg}")]
+    linter = _Linter(rel)
+    linter.visit(tree)
+    return linter.diags
+
+
+def lint_paths(root=None,
+               ) -> Tuple[List[Diagnostic], List[str]]:
+    """Lint every ``.py`` file under ``root`` (default: the installed
+    ``repro`` package directory)."""
+    if root is None:
+        root = pathlib.Path(__file__).resolve().parents[1]
+    root = pathlib.Path(root)
+    diags: List[Diagnostic] = []
+    checked: List[str] = []
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        checked.append(rel)
+        diags.extend(lint_source(path.read_text(), rel))
+    return diags, checked
+
+
+def check_registry() -> Tuple[List[Diagnostic], List[str]]:
+    """Cross-check every family's engine program against its declared
+    checkpoint layout: ``FamilyProgram.carry_names`` must be covered by
+    the names ``state_layout(cfg)`` declares for at least one registered
+    cfg shape — otherwise engine-written ``SolveState`` leaves cannot be
+    restored by name."""
+    from repro.core.engine import FamilyProgram
+    from repro.core.types import FAMILIES
+    diags: List[Diagnostic] = []
+    checked: List[str] = []
+    for fam in FAMILIES.values():
+        if fam.state_layout is None:
+            continue
+        layouts = []
+        for accelerated in (False, True):
+            try:
+                cfg = variant_config(
+                    fam, sorted(fam.variants)[0], s=8,
+                    accelerated=accelerated)
+            except (TypeError, ValueError):
+                continue
+            layouts.append(frozenset(
+                name for name, _ in fam.state_layout(cfg)))
+        programs = {}
+        for vname in fam.variants:
+            module = inspect.getmodule(fam.variant(vname))
+            if module is None:
+                continue
+            for attr, val in vars(module).items():
+                if isinstance(val, FamilyProgram):
+                    programs[f"{module.__name__}.{attr}"] = val
+        for pname, prog in programs.items():
+            where = f"{fam.name}:{pname}"
+            checked.append(where)
+            carry = frozenset(prog.carry_names)
+            if not any(carry <= layout for layout in layouts):
+                missing = carry - frozenset().union(*layouts) \
+                    if layouts else carry
+                diags.append(Diagnostic(
+                    "registry", "error", where,
+                    f"carry_names {sorted(carry)} not covered by any "
+                    f"state_layout(cfg) ({[sorted(l) for l in layouts]}"
+                    f") — leaves {sorted(missing)} would checkpoint "
+                    f"under names the restore path cannot map"))
+    return diags, checked

@@ -48,7 +48,7 @@ AxisNames = Union[str, Tuple[str, ...]]
 
 __all__ = [
     "solve", "solve_sharded", "lower_solve", "resolve_family", "families",
-    "BACKENDS",
+    "BACKENDS", "TracedSolve", "trace_sharded",
 ]
 
 
@@ -308,6 +308,72 @@ def lower_solve(family: object, cfg: SolverConfig, mesh: Mesh,
                    out_specs=(x_out, P()), check_rep=False)
     return jax.jit(fn).lower(jax.ShapeDtypeStruct((m, n), dtype),
                              jax.ShapeDtypeStruct((m,), dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class TracedSolve:
+    """A sharded solve as a jaxpr plus its DECLARED output contract —
+    the static-analysis view of :func:`solve_sharded` (repro.analysis).
+
+    jaxpr:       the ``ClosedJaxpr`` of the full shard_map'd solve.
+    out_layout:  ``(name, layout)`` per output, in output order, with
+                 layout in {"replicated", "partition"} — exactly what
+                 the family registered (solution/objective/aux_out/
+                 state_layout), i.e. the contract the replicated-taint
+                 pass verifies the dataflow against.
+    axes:        the mesh axis name(s) the solve reduces over.
+    """
+
+    jaxpr: Any
+    out_layout: Tuple[Tuple[str, str], ...]
+    axes: AxisNames
+
+
+def trace_sharded(family: object, cfg: SolverConfig, mesh: Mesh,
+                  m: int, n: int, axes: Optional[AxisNames] = None,
+                  dtype=jnp.float32,
+                  problem_kwargs: Optional[Dict[str, Any]] = None
+                  ) -> TracedSolve:
+    """Trace (without lowering or executing) a full sharded solve for
+    shape (m, n), with the family's ``aux_out`` vectors AND
+    ``state_layout`` carry leaves as outputs — the same output structure
+    :func:`solve_sharded` runs, so a static pass over this jaxpr checks
+    the program the driver actually executes. ``repro.analysis`` builds
+    its collective-budget and replicated-taint passes on this entry;
+    a 1-device mesh suffices (divergence is symbolic in the jaxpr)."""
+    fam = resolve_family(family=family)
+    if axes is None:
+        axes = fam.default_axes
+    kwargs = dict(fam.bench_problem_kwargs if problem_kwargs is None
+                  else problem_kwargs)
+    vec, a_spec, b_spec, x_out = _specs(fam, axes)
+    layout = fam.state_layout(cfg) if fam.state_layout is not None else ()
+
+    def local_solve(A_loc, b_loc):
+        prob = fam.problem_cls(A=A_loc, b=b_loc, **kwargs)
+        res = fam.solve(prob, cfg, axis_name=axes)
+        outs = (res.x, res.objective) \
+            + tuple(res.aux[k] for k, _ in fam.aux_out)
+        if layout:
+            outs += tuple(res.aux["state"].carry[name]
+                          for name, _ in layout)
+        return outs
+
+    aux_specs = tuple(vec if lay == "partition" else P()
+                      for _, lay in fam.aux_out)
+    state_specs = tuple(vec if lay == "partition" else P()
+                        for _, lay in layout)
+    fn = shard_map(local_solve, mesh=mesh, in_specs=(a_spec, b_spec),
+                   out_specs=(x_out, P()) + aux_specs + state_specs,
+                   check_rep=False)
+    jaxpr = jax.make_jaxpr(fn)(jax.ShapeDtypeStruct((m, n), dtype),
+                               jax.ShapeDtypeStruct((m,), dtype))
+    out_layout = (
+        ("x", "partition" if fam.partition == "col" else "replicated"),
+        ("objective", "replicated"),
+    ) + tuple(fam.aux_out) + tuple(("state." + name, lay)
+                                   for name, lay in layout)
+    return TracedSolve(jaxpr=jaxpr, out_layout=out_layout, axes=axes)
 
 
 # ---------------------------------------------------------------------------

@@ -10,4 +10,15 @@ Kernels:
     sa_inner        — the Lasso s-step SA inner loop, entirely in VMEM
     svm_inner       — the SVM s-step SA inner loop (linear + kernel blocks)
     flash_attention — blocked causal/sliding-window GQA attention
+
+``dispatch`` is the shared Pallas-vs-ref policy; its helpers (and the
+warn-once reset the test suite uses) are re-exported here.
 """
+from repro.kernels.dispatch import (choose_inner_impl, choose_spmm_impl,
+                                    reset_fallback_warnings, spmm_vmem_ok,
+                                    vmem_ok)
+
+__all__ = [
+    "choose_inner_impl", "choose_spmm_impl", "reset_fallback_warnings",
+    "spmm_vmem_ok", "vmem_ok",
+]

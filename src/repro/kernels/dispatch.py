@@ -30,6 +30,18 @@ def vmem_ok(s: int, mu: int, itemsize: int = 4) -> bool:
     return (s * mu) ** 2 * itemsize <= _VMEM_G_BYTES_CAP
 
 
+def reset_fallback_warnings() -> None:
+    """Forget which fallback configurations have already warned.
+
+    The warn-once memo is process-global, which is right for a solver
+    run but leaks across tests: whichever test first trips a fallback
+    swallows the warning every later test asserts on (order-dependent
+    flakiness). The test suite resets it around every test (see
+    tests/conftest.py); long-lived drivers can call it to re-arm the
+    warnings after reconfiguring."""
+    _warned.clear()
+
+
 def _warn_fallback(key, message: str) -> None:
     if key in _warned:
         return

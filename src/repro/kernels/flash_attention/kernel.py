@@ -108,7 +108,8 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
     padding never shifts the causal/window band). Returns (B, Hq, Sq, D)."""
     B, Hq, Sq, D = q.shape
     Hkv, Sk = k.shape[1], k.shape[2]
-    assert Hq % Hkv == 0
+    if Hq % Hkv != 0:
+        raise ValueError(f"query heads {Hq} not a multiple of kv heads {Hkv}")
     group = Hq // Hkv
     if scale is None:
         scale = 1.0 / (D ** 0.5)

@@ -51,8 +51,12 @@ def gram_t_pallas(x, y, *, block_m: int = 256, block_i: int = 128,
     (ops.py pads)."""
     m, p = x.shape
     m2, q = y.shape
-    assert m == m2, (x.shape, y.shape)
-    assert m % block_m == 0 and p % block_i == 0 and q % block_j == 0
+    if m != m2:
+        raise ValueError(f"contraction dims differ: {x.shape} vs {y.shape}")
+    if m % block_m or p % block_i or q % block_j:
+        raise ValueError(
+            f"shapes ({m}, {p}) x ({m2}, {q}) do not divide blocks "
+            f"({block_m}, {block_i}, {block_j})")
 
     grid = (p // block_i, q // block_j, m // block_m)
     return pl.pallas_call(

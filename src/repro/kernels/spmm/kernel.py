@@ -66,7 +66,8 @@ def ell_spmm_pallas(vals, idx, blocks, D, *, ell_block: int,
     a multiple of ``ell_block`` (ops.py guarantees both). Returns f32."""
     R, K = vals.shape
     C, Q = D.shape
-    assert K % ell_block == 0, (K, ell_block)
+    if K % ell_block != 0:
+        raise ValueError(f"K={K} is not a multiple of ell_block={ell_block}")
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,      # flat indices + per-row block counts

@@ -72,7 +72,10 @@ def init_params(arch: ArchConfig, key) -> Dict:
     D, V = arch.d_model, arch.vocab_size
     keys = jax.random.split(key, arch.n_layers + 8)
     period = len(arch.block_pattern)
-    assert arch.n_layers % period == 0, (arch.name, arch.n_layers, period)
+    if arch.n_layers % period != 0:
+        raise ValueError(
+            f"{arch.name}: n_layers={arch.n_layers} not a multiple of "
+            f"the block pattern period {period}")
     groups = arch.n_layers // period
 
     # stack each pattern slot's params over the groups.

@@ -45,7 +45,8 @@ def chunked_gla(q, k, v, log_a, *, chunk: int = 128,
     B, H, T, dk = q.shape
     dv = v.shape[-1]
     C = min(chunk, T)
-    assert T % C == 0, (T, C)
+    if T % C != 0:
+        raise ValueError(f"sequence length {T} not a multiple of chunk {C}")
     N = T // C
     f32 = jnp.float32
 

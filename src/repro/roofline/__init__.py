@@ -1,2 +1,4 @@
-from repro.roofline.analysis import (HW_V5E, collective_bytes_from_hlo,
+from repro.roofline.analysis import (HW_V5E, CollectiveStats,
+                                     collective_bytes_from_hlo,
+                                     collective_stats_from_hlo,
                                      roofline_terms, model_flops)

@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import re
-from typing import Dict, Optional
+from typing import Any, Dict, Mapping, Optional
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -67,39 +67,79 @@ def _shape_bytes(shape_str: str) -> int:
     return n * _DTYPE_BYTES[dt]
 
 
-def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
-    """Sum result bytes of every collective op in a (post-SPMD) HLO dump.
+_HLO_OP_RE = re.compile(
+    r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\(")
 
-    Handles both plain and tuple-shaped results, e.g.
-        bf16[128,256]{1,0} all-reduce(...)
-        (f32[8,4]{1,0}, f32[8,4]{1,0}) all-gather(...)
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveStats:
+    """Typed per-collective counts and result bytes parsed from an HLO
+    dump (replaces the historical dict whose ``counts`` entry was
+    smuggled past the ``Dict[str, float]`` annotation with a
+    ``# type: ignore``)."""
+
+    counts: Mapping[str, int]
+    bytes: Mapping[str, float]
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes.values()))
+
+    @property
+    def total_count(self) -> int:
+        return int(sum(self.counts.values()))
+
+
+def collective_stats_from_hlo(hlo_text: str) -> CollectiveStats:
+    """Count collective ops and sum their result bytes in a (post-SPMD)
+    HLO dump.
+
+    ONE rule covers every form an op can take:
+
+      * plain:        ``bf16[128,256]{1,0} all-reduce(...)`` — count the
+        op once, sum every result shape (tuple results are variadic
+        collectives: each element is a distinct reduced buffer);
+      * ``-start``:   the async launch half of a ``-start``/``-done``
+        pair. When its result is a 2k-tuple whose halves match, the
+        first half aliases the operand buffers and only the second half
+        is the communicated result — count the op once with the result
+        half's bytes (the historical parser summed both, double
+        counting every async collective);
+      * ``-done``:    the completion marker of a pair already counted at
+        its ``-start`` — skipped entirely.
+
     Ops inside while bodies are counted once (caller applies trip-count
     fits).
     """
-    out = {c: 0.0 for c in _COLLECTIVES}
-    count = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    bytes_ = {c: 0.0 for c in _COLLECTIVES}
     for line in hlo_text.splitlines():
-        line = line.strip()
-        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s*"
-                     r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
-                     r"collective-permute)(?:-start|-done)?\(", line)
+        m = _HLO_OP_RE.match(line.strip())
         if not m:
             continue
-        shapes_part, op = m.group(1), m.group(2)
-        if op.endswith("-done") or "-done(" in line:
+        shapes_part, op, suffix = m.groups()
+        if suffix == "-done":
             continue
-        total = 0
-        for sm in _SHAPE_RE.finditer(shapes_part):
-            total += _shape_bytes(sm.group(0))
-        # -start/-done pairs would double count: only count ...-start and
-        # plain forms. (-done matched ops carry no shape on the left for
-        # CPU HLO; guard anyway by skipping zero-byte lines.)
-        if "-done" in line.split("=")[1].split("(")[0]:
-            continue
-        out[op] += total
-        count[op] += 1
-    out["total"] = sum(out[c] for c in _COLLECTIVES)
-    out["counts"] = count  # type: ignore
+        shapes = [_shape_bytes(sm.group(0))
+                  for sm in _SHAPE_RE.finditer(shapes_part)]
+        if suffix == "-start" and len(shapes) % 2 == 0 and \
+                shapes[:len(shapes) // 2] == shapes[len(shapes) // 2:]:
+            shapes = shapes[len(shapes) // 2:]
+        counts[op] += 1
+        bytes_[op] += float(sum(shapes))
+    return CollectiveStats(counts=counts, bytes=bytes_)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, Any]:
+    """Legacy dict view of :func:`collective_stats_from_hlo` — per-op
+    bytes keyed by op name, plus ``"total"`` (bytes) and ``"counts"``
+    (the per-op count dict)."""
+    stats = collective_stats_from_hlo(hlo_text)
+    out: Dict[str, Any] = dict(stats.bytes)
+    out["total"] = stats.total_bytes
+    out["counts"] = dict(stats.counts)
     return out
 
 

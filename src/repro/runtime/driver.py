@@ -55,7 +55,9 @@ class TrainerConfig:
 
 def build_mesh(devices: List, model_axis: int) -> Mesh:
     n = len(devices)
-    assert n % model_axis == 0, (n, model_axis)
+    if n % model_axis != 0:
+        raise ValueError(
+            f"{n} devices do not divide into model_axis={model_axis}")
     devs = np.array(devices).reshape(n // model_axis, model_axis)
     return Mesh(devs, ("data", "model"))
 

@@ -7,6 +7,17 @@ import numpy as np
 import pytest
 
 
+@pytest.fixture(autouse=True)
+def _fresh_fallback_warnings():
+    """The kernel dispatch warn-once memo is process-global; without a
+    reset, whichever test first trips a Pallas->ref fallback swallows
+    the warning every later test asserts on. Re-arm it per test."""
+    from repro.kernels import reset_fallback_warnings
+    reset_fallback_warnings()
+    yield
+    reset_fallback_warnings()
+
+
 @pytest.fixture(scope="session")
 def lasso_data():
     """Small well-conditioned lasso problem with a planted sparse x."""

@@ -1,0 +1,262 @@
+"""The static contract analyzer (repro.analysis): registry-wide green
+runs, seeded violations producing distinct diagnostics, lint rules, and
+the CLI.
+
+The seeded-violation tests build stub ProblemFamily instances whose
+``solve`` deliberately breaks ONE contract (a second psum, a missing
+psum before a replicated output, a hard-coded f32 cast) and assert the
+matching pass — and only that pass — flags it.
+"""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (CHECKS, Diagnostic, check_all,
+                            check_collectives, check_dtypes,
+                            check_registry, check_replication,
+                            collective_budget, find_float_narrowing,
+                            lint_source, shard_map_out_taints)
+from repro.core.types import FAMILIES, LassoProblem, ProblemFamily, \
+    SolverResult
+
+pytestmark = pytest.mark.analysis
+
+
+# ---------------------------------------------------------------------------
+# stub families: each breaks exactly one contract
+# ---------------------------------------------------------------------------
+
+def _stub(solve, name="stub"):
+    return ProblemFamily(
+        name=name, problem_cls=LassoProblem, solve=solve,
+        variants={"classical": ""}, partition="row", default_axes="data",
+        bench_problem_kwargs={"lam": 0.1})
+
+
+def _scan_solve(body_grad, length_attr="iterations"):
+    def solve(problem, cfg, axis_name=None, x0=None):
+        def body(c, _):
+            return c - 0.01 * body_grad(problem, c, axis_name), 0.0
+        x, obj = jax.lax.scan(body, jnp.zeros(problem.A.shape[1],
+                                              problem.A.dtype),
+                              None, length=getattr(cfg, length_attr))
+        return SolverResult(x=x, objective=jnp.sum(obj))
+    return solve
+
+
+def _good_grad(problem, c, axis_name):
+    return jax.lax.psum(problem.A.T @ (problem.A @ c - problem.b),
+                        axis_name)
+
+
+GOOD = _stub(_scan_solve(_good_grad), "stub_good")
+
+
+def test_stub_good_is_clean():
+    for check in (check_collectives, check_replication, check_dtypes):
+        diags, checked = check(GOOD)
+        assert checked == ["stub_good:classical"]
+        assert not [d for d in diags if d.severity == "error"], \
+            [d.format() for d in diags]
+
+
+def test_seeded_second_psum_flags_collectives_only():
+    def grad(problem, c, axis_name):
+        g = _good_grad(problem, c, axis_name)
+        return g + jax.lax.psum(jnp.sum(g), axis_name)   # the 2nd psum
+    fam = _stub(_scan_solve(grad), "stub_two_psum")
+    errs = [d for d in check_collectives(fam)[0] if d.severity == "error"]
+    assert len(errs) == 1 and errs[0].check == "collectives"
+    assert "found 2" in errs[0].message
+    # the extra psum keeps everything replicated: replication stays green
+    assert not check_replication(fam)[0]
+
+
+def test_seeded_shard_divergent_replicated_output():
+    def grad(problem, c, axis_name):
+        return problem.A.T @ (problem.A @ c - problem.b)  # never psum'd
+    fam = _stub(_scan_solve(grad), "stub_divergent")
+    errs = [d for d in check_replication(fam)[0] if d.severity == "error"]
+    assert errs and all(d.check == "replication" for d in errs)
+    assert any("'x'" in d.message and "data" in d.message for d in errs)
+
+
+def test_seeded_f64_downcast_flags_dtypes_only():
+    def solve(problem, cfg, axis_name=None, x0=None):
+        A32 = problem.A.astype(jnp.float32)              # silent narrow
+        def body(c, _):
+            g = jax.lax.psum(A32.T @ (A32 @ c), axis_name)
+            return c - 0.01 * g.astype(problem.A.dtype), 0.0
+        x, obj = jax.lax.scan(body, jnp.zeros(problem.A.shape[1],
+                                              problem.A.dtype),
+                              None, length=cfg.iterations)
+        return SolverResult(x=x, objective=jnp.sum(obj))
+    fam = _stub(solve, "stub_downcast")
+    errs = [d for d in check_dtypes(fam)[0] if d.severity == "error"]
+    assert errs and all(d.check == "dtypes" for d in errs)
+    assert "float64 -> float32" in errs[0].message
+    # the cast is shard-uniform and the psum is intact: the other two
+    # passes stay green (distinct diagnostics per seeded violation).
+    assert not check_replication(fam)[0]
+    assert not [d for d in check_collectives(fam)[0]
+                if d.severity == "error"]
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walkers, directly
+# ---------------------------------------------------------------------------
+
+def test_collective_budget_splits_loop_vs_amortized():
+    def f(x):
+        def body(c, _):
+            return jax.lax.psum(c, "i"), None
+        out, _ = jax.lax.scan(body, x, None, length=4)
+        return jax.lax.psum(out, "i")                    # tail/amortized
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("i",))
+    fn = shard_map(f, mesh=mesh, in_specs=(P(),), out_specs=P(),
+                   check_rep=False)
+    budget = collective_budget(
+        jax.make_jaxpr(fn)(jax.ShapeDtypeStruct((8,), jnp.float32)))
+    assert budget.per_iteration["all-reduce"] == 1
+    assert budget.amortized["all-reduce"] == 1
+    assert budget.per_iteration_bytes == 8 * 4
+    assert budget.total["all-reduce"] == 2
+
+
+def test_taint_axis_index_and_while_predicate():
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("i",))
+
+    def f(x):
+        div = jnp.float32(jax.lax.axis_index("i"))       # shard-varying
+
+        def cond(c):
+            return jnp.sum(c) + div < 10.0               # tainted pred
+
+        def body(c):
+            return c + 1.0
+
+        looped = jax.lax.while_loop(cond, body, jnp.zeros(()))
+        return jax.lax.psum(x, "i"), looped
+
+    fn = shard_map(f, mesh=mesh, in_specs=(P("i"),), out_specs=(P(), P()),
+                   check_rep=False)
+    outs, _ = shard_map_out_taints(
+        jax.make_jaxpr(fn)(jax.ShapeDtypeStruct((8,), jnp.float32)))
+    assert outs[0] == frozenset()          # psum'd: replicated
+    assert outs[1] == frozenset({"i"})     # trip count may diverge
+
+
+def test_find_float_narrowing_reports_site():
+    from jax.experimental import enable_x64
+    with enable_x64():
+        j = jax.make_jaxpr(lambda x: (x * 2.0).astype(jnp.float32))(
+            jax.ShapeDtypeStruct((4,), jnp.float64))
+    hits = find_float_narrowing(j)
+    assert hits and hits[0][:2] == ("float64", "float32")
+
+
+# ---------------------------------------------------------------------------
+# lint rules
+# ---------------------------------------------------------------------------
+
+def _rules(diags):
+    return sorted({d.message.split("]")[0].lstrip("[") for d in diags})
+
+
+def test_lint_raw_collective_outside_allowlist():
+    src = "import jax\n\ndef f(x):\n    return jax.lax.psum(x, 'i')\n"
+    assert _rules(lint_source(src, "core/sa_new.py")) == ["raw-collective"]
+    assert not lint_source(src, "optim/compress.py")
+    assert not lint_source(src, "core/linalg.py")
+
+
+def test_lint_raw_collective_from_import():
+    src = "from jax.lax import psum\n"
+    assert _rules(lint_source(src, "core/x.py")) == ["raw-collective"]
+
+
+def test_lint_ambient_rng():
+    assert _rules(lint_source("import random\n", "core/x.py")) == \
+        ["ambient-rng"]
+    assert _rules(lint_source(
+        "import numpy as np\nnp.random.seed(0)\n", "data/x.py")) == \
+        ["ambient-rng"]   # global state: not allowed even in data/
+    gen = "import numpy as np\nr = np.random.default_rng(0)\n"
+    assert _rules(lint_source(gen, "core/x.py")) == ["ambient-rng"]
+    assert not lint_source(gen, "data/x.py")
+    assert not lint_source(gen, "tune/microbench.py")
+    assert not lint_source("import jax\nk = jax.random.key(0)\n",
+                           "core/x.py")
+
+
+def test_lint_bare_assert():
+    assert _rules(lint_source("def f(x):\n    assert x > 0\n",
+                              "core/x.py")) == ["bare-assert"]
+    assert not lint_source(
+        "def f(x):\n    if x <= 0:\n        raise ValueError('x')\n",
+        "core/x.py")
+
+
+def test_diagnostic_rejects_unknown_severity():
+    with pytest.raises(ValueError, match="severity"):
+        Diagnostic("lint", "fatal", "x", "y")
+
+
+# ---------------------------------------------------------------------------
+# registry-wide runs + CLI
+# ---------------------------------------------------------------------------
+
+def test_registry_contract_covers_all_programs():
+    diags, checked = check_registry()
+    # every family with engine-backed variants exposes its program(s)
+    assert len(checked) >= len(FAMILIES)
+    assert not diags, [d.format() for d in diags]
+
+
+def test_check_all_full_registry_green():
+    report = check_all()
+    assert report.ok, report.format()
+    combos = sum(len(f.variants) for f in FAMILIES.values())
+    for check in ("collectives", "replication", "dtypes"):
+        assert sum(c.startswith(f"{check}:") for c in report.checked) \
+            == combos
+    assert any(c.startswith("lint:") for c in report.checked)
+    assert any(c.startswith("registry:") for c in report.checked)
+    # the bytes-per-outer measurements ride along as info diagnostics
+    assert sum(d.severity == "info" and d.check == "collectives"
+               for d in report.diagnostics) == combos
+
+
+def test_check_all_validates_selection():
+    with pytest.raises(ValueError, match="unknown checks"):
+        check_all(checks=("nope",))
+    with pytest.raises(ValueError, match="unknown family"):
+        check_all(checks=("lint",), families=("nope",))
+    assert set(CHECKS) == {"collectives", "replication", "dtypes",
+                           "lint", "registry"}
+
+
+def test_cli_lint_and_registry():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--checks", "lint",
+         "registry"], capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "0 error(s)" in out.stdout
+
+
+def test_sa_lint_cli_clean():
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parents[1]
+    out = subprocess.run(
+        [sys.executable, str(root / "tools" / "sa_lint.py")],
+        capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "0 finding(s)" in out.stdout

@@ -4,6 +4,7 @@ import numpy as np
 import pytest
 
 from repro.roofline.analysis import (HW_V5E, collective_bytes_from_hlo,
+                                     collective_stats_from_hlo,
                                      cost_analysis_dict, model_flops,
                                      roofline_terms, two_point_fit)
 
@@ -42,6 +43,63 @@ def test_collective_parser_tuple_shapes():
     hlo = "%t = (f32[8]{0}, f32[8]{0}) all-gather(%a, %b)"
     out = collective_bytes_from_hlo(hlo)
     assert out["all-gather"] == 2 * 8 * 4
+
+
+# verbatim shape of a real jax 0.4.x XLA-CPU post-SPMD dump (4 forced
+# host devices, psum of an (8, 8) f32 inside shard_map): ROOT-prefixed
+# op, typed operands, channel/replica metadata trailing the call.
+REAL_CPU_HLO = """\
+HloModule jit_fn, entry_computation_layout={(f32[8,8]{1,0})->f32[8,8]{1,0}}
+
+%region_0.4 (Arg_0.5: f32[], Arg_1.6: f32[]) -> f32[] {
+  %Arg_0.5 = f32[] parameter(0)
+  %Arg_1.6 = f32[] parameter(1)
+  ROOT %add.7 = f32[] add(f32[] %Arg_0.5, f32[] %Arg_1.6)
+}
+
+ENTRY %main.9 (Arg_0.1: f32[8,8]) -> f32[8,8] {
+  %Arg_0.1 = f32[8,8]{1,0} parameter(0), metadata={op_name="x"}
+  %dot.1 = f32[8,8]{1,0} dot(f32[8,8]{1,0} %Arg_0.1, f32[8,8]{1,0} %Arg_0.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %all-reduce.1 = f32[8,8]{1,0} all-reduce(f32[8,8]{1,0} %dot.1), channel_id=1, replica_groups={{0,1,2,3}}, use_global_device_ids=true, to_apply=%region_0.4, metadata={op_name="jit(fn)/jit(main)/psum"}
+}
+"""
+
+
+def test_collective_parser_real_cpu_hlo_root_prefix():
+    """The historical parser's regex missed ROOT-prefixed collectives
+    entirely — which is exactly how XLA prints an all-reduce that is the
+    computation's result. Pin the real-dump form."""
+    stats = collective_stats_from_hlo(REAL_CPU_HLO)
+    assert stats.counts["all-reduce"] == 1
+    # operand shape f32[8,8] inside all-reduce(...) must NOT be summed:
+    # only the result buffer travels.
+    assert stats.bytes["all-reduce"] == 8 * 8 * 4
+    assert stats.total_count == 1
+
+
+def test_collective_parser_start_done_counted_once():
+    """Async collectives appear as a -start/-done pair whose -start
+    result tuple aliases the operand buffers in its first half; the op
+    is ONE transfer of the result half's bytes."""
+    hlo = """\
+  %ar-start = (f32[128,64]{1,0}, f32[128,64]{1,0}) all-reduce-start(f32[128,64]{1,0} %p0), replica_groups={{0,1}}, to_apply=%sum
+  %ar-done = f32[128,64]{1,0} all-reduce-done((f32[128,64]{1,0}, f32[128,64]{1,0}) %ar-start)
+"""
+    stats = collective_stats_from_hlo(hlo)
+    assert stats.counts["all-reduce"] == 1
+    assert stats.bytes["all-reduce"] == 128 * 64 * 4
+
+
+def test_collective_parser_typed_counts():
+    """CollectiveStats keeps counts and bytes in separate typed fields;
+    the legacy dict view mirrors them under \"counts\"/\"total\"."""
+    stats = collective_stats_from_hlo(SAMPLE_HLO)
+    assert stats.counts == {"all-reduce": 1, "all-gather": 1,
+                            "reduce-scatter": 1, "all-to-all": 1,
+                            "collective-permute": 1}
+    legacy = collective_bytes_from_hlo(SAMPLE_HLO)
+    assert legacy["counts"] == dict(stats.counts)
+    assert legacy["total"] == stats.total_bytes
 
 
 def test_two_point_fit_exact_linear():

@@ -21,7 +21,8 @@ import sys
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SURFACE_FILE = os.path.join(ROOT, "api_surface.txt")
 MODULES = ("repro.core", "repro.core.engine", "repro.api",
-           "repro.kernels.spmm", "repro.tune", "repro.runtime.elastic")
+           "repro.analysis", "repro.kernels", "repro.kernels.spmm",
+           "repro.tune", "repro.runtime.elastic")
 
 
 def current_surface() -> list[str]:

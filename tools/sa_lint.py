@@ -1,0 +1,32 @@
+#!/usr/bin/env python
+"""Standalone repo lint: the AST rules of ``repro.analysis.lint``
+(raw-collective / ambient-rng / bare-assert) over the library source,
+without tracing any solver — fast enough for a pre-commit hook.
+
+    python tools/sa_lint.py [src/repro]
+
+Exits 1 on any finding. The full analyzer (jaxpr passes included) is
+``python -m repro.analysis``.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.analysis.lint import lint_paths  # noqa: E402
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = pathlib.Path(argv[0]) if argv else None
+    diags, checked = lint_paths(root)
+    for d in diags:
+        print(d.format())
+    print(f"{len(checked)} files linted, {len(diags)} finding(s)")
+    return 1 if diags else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
