@@ -1,0 +1,79 @@
+"""Static Table I certification report: counted-vs-modeled cost ratios
+for every registered family x variant x s, straight from the analyzer's
+``cost_ratio_rows`` (no solves, no devices — the jaxpr IS the
+measurement). Writes ``results/perf/certified.json`` plus the usual CSV
+rows, and runs the kernel safety pass so the artifact also records each
+Pallas package's derived-vs-modeled VMEM footprint.
+
+    PYTHONPATH=src python -m benchmarks.run --only certify [--smoke]
+
+``--smoke`` trims the s grid to (1, 4) and skips the SparseOperand
+traces — the CI-sized budget.
+"""
+import json
+import os
+
+from benchmarks.common import emit
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+OUT_PATH = os.path.join(ROOT, "results", "perf", "certified.json")
+
+
+def main(smoke: bool = False) -> None:
+    from repro.analysis import check_costs, check_kernels, cost_ratio_rows
+    from repro.analysis.costs import CERT_S_GRID
+    from repro.core.types import FAMILIES
+
+    s_grid = (1, 4) if smoke else CERT_S_GRID
+    sparse = not smoke
+    entries = []
+    certified = True
+    for name in sorted(FAMILIES):
+        fam = FAMILIES[name]
+        diags, _ = check_costs(fam, s_grid=s_grid, sparse=sparse)
+        errors = [d for d in diags if d.severity == "error"]
+        certified &= not errors
+        for row in cost_ratio_rows(fam, s_grid=s_grid, sparse=sparse):
+            entries.append({
+                "family": row.family, "variant": row.variant,
+                "s": row.s, "mu": row.mu,
+                "counted_flops": row.flops,
+                "model_flops": row.model_flops,
+                "f_ratio": row.f_ratio,
+                "counted_words": row.words,
+                "model_words": row.model_words,
+                "w_ratio": row.w_ratio,
+                "messages": row.messages,
+                "sparse_ratio": row.sparse_ratio,
+            })
+            nnz = "" if row.sparse_ratio is None \
+                else f";nnz_ratio={row.sparse_ratio:.2f}"
+            emit(f"certify/{row.family}/{row.variant}/s{row.s}", 0.0,
+                 f"F_ratio={row.f_ratio:.2f};W_ratio={row.w_ratio:.2f};"
+                 f"msgs={row.messages:.0f}{nnz};"
+                 f"errors={len(errors)}")
+    kdiags, kchecked = check_kernels()
+    kernel_errors = [d for d in kdiags if d.severity == "error"]
+    certified &= not kernel_errors
+    for d in kdiags:
+        if d.severity == "info":
+            emit(f"certify/kernels/{d.where}", 0.0,
+                 d.message.split(" — ")[0].replace(" ", "_"))
+    emit("certify/ok", 0.0,
+         f"certified={certified};rows={len(entries)};"
+         f"kernel_packages={len(kchecked)};"
+         f"kernel_errors={len(kernel_errors)}")
+
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as fh:
+        json.dump({"smoke": smoke, "s_grid": list(s_grid),
+                   "sparse": sparse, "certified": certified,
+                   "rows": entries,
+                   "kernel_packages": list(kchecked),
+                   "kernel_diagnostics": [d.to_dict() for d in kdiags]},
+                  fh, indent=1)
+    print(f"# wrote {os.path.relpath(OUT_PATH, ROOT)}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -61,47 +61,32 @@ for name in sorted(FAMILIES):
 
 
 def static_rows():
-    """The jaxpr-level budget, in-process (1 device is enough: the
-    trace is symbolic)."""
+    """The jaxpr-level budget rows, in-process (1 device is enough: the
+    trace is symbolic) — assembled by the analyzer's shared
+    ``budget_rows`` helper, not re-derived here."""
     sys.path.insert(0, SRC)
-    from repro.analysis import solver_collective_budget
-    from repro.core.types import FAMILIES, SolverConfig
-    shapes = {"row": (512, 128), "col": (256, 512)}
-    rows = {}
-    for name in sorted(FAMILIES):
-        fam = FAMILIES[name]
-        m, n = shapes[fam.partition]
-        for s in S_VALUES:
-            cfg = SolverConfig(block_size=fam.bench_block_size,
-                               iterations=H, s=s, track_objective=False)
-            budget = solver_collective_budget(fam, cfg, m=m, n=n)
-            rows[(name, s)] = budget
-    return rows
+    from repro.analysis import budget_rows
+    return budget_rows(s_values=S_VALUES, iterations=H)
 
 
 def main():
     rows = static_rows()
     kinds = sorted({name for name, _ in rows})
-    msgs = {}
-    for (name, s), budget in sorted(rows.items()):
-        static = budget.per_iteration["all-reduce"]
-        others = sum(v for k, v in budget.total.items()
-                     if k != "all-reduce")
-        trips = -(-H // s)
-        msgs[(name, s)] = static * trips
+    for (name, s), row in sorted(rows.items()):
         emit(f"collective_count/{name}/s{s}", 0.0,
-             f"static={static};other_collectives={others};trips={trips};"
-             f"runtime_msgs={static * trips};"
-             f"bytes_per_outer={budget.per_iteration_bytes:.0f}")
+             f"static={row.allreduces_in_loop};"
+             f"other_collectives={row.other_collectives};"
+             f"trips={row.trips};runtime_msgs={row.runtime_messages};"
+             f"bytes_per_outer={row.bytes_per_outer:.0f}")
     for name in kinds:
-        red = msgs[(name, 1)] / max(msgs[(name, 16)], 1)
+        red = rows[(name, 1)].runtime_messages \
+            / max(rows[(name, 16)].runtime_messages, 1)
         emit(f"collective_count/{name}/reduction_s16", 0.0,
              f"latency_reduction={red:.1f}x(expected~16x)")
     # the SA claim, structurally: ONE in-loop Allreduce per outer
     # iteration and zero other collectives, for every registered family.
-    worst = max(b.per_iteration["all-reduce"] for b in rows.values())
-    extra = max(sum(v for k, v in b.total.items() if k != "all-reduce")
-                for b in rows.values())
+    worst = max(r.allreduces_in_loop for r in rows.values())
+    extra = max(r.other_collectives for r in rows.values())
     emit("collective_count/one_allreduce_per_outer", 0.0,
          f"max_static={worst};max_other={extra};families={len(kinds)};"
          f"ok={worst == 1 and extra == 0}")
@@ -120,8 +105,7 @@ def main():
                      r"compiled_other=(\d+)", line)
         if m:
             kind, s, ar, other = m.groups()
-            budget = rows[(kind.lower(), int(s))]
-            want = sum(budget.total.values())
+            want = sum(rows[(kind.lower(), int(s))].budget.total.values())
             agree &= int(ar) + int(other) == want
             emit(f"collective_count/{kind.lower()}/s{s}/compiled", 0.0,
                  f"allreduce={ar};other={other};jaxpr_total={want}")

@@ -18,9 +18,11 @@ SECTIONS = {}
 
 
 def _register():
-    from benchmarks import paper_lasso, paper_svm, collective_count, \
-        density_sweep, recovery, roofline_bench, tuned_vs_default
+    from benchmarks import paper_lasso, paper_svm, certify, \
+        collective_count, density_sweep, recovery, roofline_bench, \
+        tuned_vs_default
     SECTIONS.update({
+        "certify": certify.main,
         "density": density_sweep.main,
         "tuned": tuned_vs_default.main,
         "recovery": recovery.main,

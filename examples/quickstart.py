@@ -100,6 +100,21 @@ def main():
           f"{len(report.checked)} variants, "
           f"{'OK' if report.ok else 'VIOLATIONS'}")
 
+    # 9. the Table I cost model itself is certified the same way: count
+    # flops/words/messages in the traced jaxpr and ratio them against
+    # the registry's cost hook across the s grid (dense here; the
+    # analyzer also certifies the SparseOperand path at O(nnz)). The
+    # constant-factor F/W ratios stay flat in s and messages fall as
+    # ceil(H/s) — the paper's claim, certified without running a solve.
+    from repro.analysis import cost_ratio_rows
+    from repro.api import FAMILIES
+    print("certified cost table (lasso, counted vs modeled):")
+    print(f"  {'variant':<16} {'s':>3} {'F ratio':>8} {'W ratio':>8} "
+          f"{'msgs':>5}")
+    for row in cost_ratio_rows(FAMILIES["lasso"], sparse=False):
+        print(f"  {row.variant:<16} {row.s:>3} {row.f_ratio:>8.2f} "
+              f"{row.w_ratio:>8.2f} {row.messages:>5.0f}")
+
 
 if __name__ == "__main__":
     main()

@@ -1,7 +1,7 @@
 """repro.analysis — static contract analyzer for the SA solvers.
 
-Four passes, each enumerating the ``FAMILIES`` registry (so new
-families and variants are covered with zero analyzer edits):
+Seven passes; the solver passes enumerate the ``FAMILIES`` registry (so
+new families and variants are covered with zero analyzer edits):
 
   * ``collectives``  — exactly ONE all-reduce per outer iteration,
     nothing else, with payload bytes reported (``collectives.py``);
@@ -10,44 +10,75 @@ families and variants are covered with zero analyzer edits):
     ``replication.py``);
   * ``dtypes``       — no silent f64 -> f32 narrowing in an f64 trace
     (``dtypes.py``);
+  * ``costs``        — the family's Table I cost model certified
+    against flops/bytes/messages COUNTED in the traced jaxpr, dense
+    and SparseOperand, across an s-grid (``costs.py``);
+  * ``kernels``      — Pallas kernel safety: VMEM guard drift, output
+    index-map injectivity (write races), index-map/gather bounds
+    (``kernels.py``);
   * ``lint``         — AST repo lint (raw collectives, ambient RNG,
     bare asserts) plus the registry carry/state-layout contract
     (``lint.py``).
 
 Entry points: :func:`check_all` in-process, ``python -m repro.analysis``
-on the command line, ``tools/sa_lint.py`` for the lint rules alone, and
-the pytest tier ``-m analysis``.
+on the command line (``--json`` for machine-readable reports),
+``tools/sa_lint.py`` for the lint rules alone, and the pytest tier
+``-m analysis``.
 """
 from __future__ import annotations
 
 from typing import Optional, Sequence
 
 from repro.analysis.collectives import (COLLECTIVE_PRIMS, CollectiveBudget,
-                                        check_collectives, collective_budget,
+                                        budget_rows, check_collectives,
+                                        collective_budget,
                                         solver_collective_budget)
 from repro.analysis.common import (AnalysisReport, Diagnostic, SEVERITIES,
                                    family_variants, variant_config)
+from repro.analysis.costs import (CostCount, CostRow, CostTolerance,
+                                  certification_operand, check_costs,
+                                  cost_count, cost_ratio_rows,
+                                  cost_tolerance, solver_cost_count)
 from repro.analysis.dtypes import check_dtypes, find_float_narrowing
+from repro.analysis.kernels import (KernelCapture, SpecView,
+                                    capture_footprint, capture_pallas_calls,
+                                    check_kernels, guard_drift_diags,
+                                    index_map_bounds_diags,
+                                    output_injectivity_diags)
 from repro.analysis.lint import check_registry, lint_paths, lint_source
 from repro.analysis.replication import (check_replication,
                                         shard_map_out_taints, taint_jaxpr)
 
-CHECKS = ("collectives", "replication", "dtypes", "lint", "registry")
+CHECKS = ("collectives", "replication", "dtypes", "costs", "kernels",
+          "lint", "registry")
 
 __all__ = [
     "AnalysisReport", "CHECKS", "COLLECTIVE_PRIMS", "CollectiveBudget",
-    "Diagnostic", "SEVERITIES", "check_all", "check_collectives",
-    "check_dtypes", "check_registry", "check_replication",
-    "collective_budget", "family_variants", "find_float_narrowing",
-    "lint_paths", "lint_source", "shard_map_out_taints",
-    "solver_collective_budget", "taint_jaxpr", "variant_config",
+    "CostCount", "CostRow", "CostTolerance", "Diagnostic",
+    "KernelCapture", "SEVERITIES", "SpecView", "budget_rows",
+    "capture_footprint", "capture_pallas_calls", "certification_operand",
+    "check_all", "check_collectives", "check_costs", "check_dtypes",
+    "check_kernels", "check_registry", "check_replication",
+    "collective_budget", "cost_count", "cost_ratio_rows",
+    "cost_tolerance", "family_variants", "find_float_narrowing",
+    "guard_drift_diags", "index_map_bounds_diags", "lint_paths",
+    "lint_source", "output_injectivity_diags", "shard_map_out_taints",
+    "solver_collective_budget", "solver_cost_count", "taint_jaxpr",
+    "variant_config",
 ]
 
 
 def check_all(checks: Optional[Sequence[str]] = None,
-              families: Optional[Sequence[str]] = None) -> AnalysisReport:
+              families: Optional[Sequence[str]] = None,
+              variants: Optional[Sequence[str]] = None) -> AnalysisReport:
     """Run the selected passes (default: all) over the selected
-    registered families (default: all) and merge the findings."""
+    registered families (default: all) and merge the findings.
+
+    ``variants`` filters the per-family solver passes to the named
+    variants (each family keeps only the names it registers; a name no
+    selected family registers is an error). The registry-wide passes
+    (``lint``, ``registry``, ``kernels``) ignore the filter.
+    """
     from repro.core.types import FAMILIES
     checks = tuple(checks or CHECKS)
     unknown = set(checks) - set(CHECKS)
@@ -60,17 +91,35 @@ def check_all(checks: Optional[Sequence[str]] = None,
             raise ValueError(f"unknown family {name!r}; registered: "
                              f"{sorted(FAMILIES)}")
         fams.append(FAMILIES[name])
+    if variants is not None:
+        registered = {v for fam in fams for v in fam.variants}
+        missing = set(variants) - registered
+        if missing:
+            raise ValueError(
+                f"variant(s) {sorted(missing)} registered by no "
+                f"selected family; available: {sorted(registered)}")
 
     report = AnalysisReport()
     per_family = {"collectives": check_collectives,
                   "replication": check_replication,
-                  "dtypes": check_dtypes}
+                  "dtypes": check_dtypes,
+                  "costs": check_costs}
     for check in checks:
         if check in per_family:
             for fam in fams:
-                diags, checked = per_family[check](fam)
+                sel = None
+                if variants is not None:
+                    sel = tuple(v for v in family_variants(fam)
+                                if v in variants)
+                    if not sel:
+                        continue
+                diags, checked = per_family[check](fam, variants=sel)
                 report.extend(diags)
                 report.checked.extend(f"{check}:{c}" for c in checked)
+        elif check == "kernels":
+            diags, checked = check_kernels()
+            report.extend(diags)
+            report.checked.extend(f"kernels:{c}" for c in checked)
         elif check == "lint":
             diags, checked = lint_paths()
             report.extend(diags)

@@ -2,12 +2,16 @@
 
 Runs the static contract analyzer and exits 1 if any pass reports an
 error — the CI "Static analysis" job is exactly this invocation.
-``-v`` additionally prints the info diagnostics (the per-variant
-all-reduce payload bytes).
+``-v`` additionally prints the info diagnostics (per-variant all-reduce
+payload bytes, certified cost ratios, derived kernel VMEM footprints);
+``--json`` emits the full machine-readable report instead of text;
+``--variants`` restricts the per-family solver passes to the named
+variants (``--family`` is an alias of ``--families``).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 from repro.analysis import CHECKS, check_all
@@ -21,15 +25,27 @@ def main(argv=None) -> int:
                         default=None, metavar="CHECK",
                         help=f"subset of passes to run (default: all of "
                              f"{', '.join(CHECKS)})")
-    parser.add_argument("--families", nargs="+", default=None,
-                        metavar="FAMILY",
+    parser.add_argument("--families", "--family", nargs="+", default=None,
+                        metavar="FAMILY", dest="families",
                         help="subset of registered families (default: all)")
+    parser.add_argument("--variants", "--variant", nargs="+", default=None,
+                        metavar="VARIANT", dest="variants",
+                        help="subset of registered variants for the "
+                             "per-family passes (default: all)")
+    parser.add_argument("--json", action="store_true",
+                        help="emit the machine-readable report (always "
+                             "includes info diagnostics)")
     parser.add_argument("-v", "--verbose", action="store_true",
-                        help="also print info diagnostics (payload bytes)")
+                        help="also print info diagnostics (payload bytes, "
+                             "cost ratios, VMEM footprints)")
     args = parser.parse_args(argv)
 
-    report = check_all(checks=args.checks, families=args.families)
-    print(report.format(verbose=args.verbose))
+    report = check_all(checks=args.checks, families=args.families,
+                       variants=args.variants)
+    if args.json:
+        print(json.dumps(report.to_dict(), indent=2, sort_keys=True))
+    else:
+        print(report.format(verbose=args.verbose))
     return 0 if report.ok else 1
 
 

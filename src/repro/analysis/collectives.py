@@ -218,3 +218,66 @@ def compiled_collective_stats(fam: ProblemFamily, cfg: SolverConfig,
     txt = api.lower_solve(fam, cfg, mesh, m=m or bm * 8, n=n or bn * 8
                           ).compile().as_text()
     return collective_stats_from_hlo(txt)
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetRow:
+    """One (family, s) row of the assembled collective-budget report —
+    the shared shape both ``benchmarks/collective_count.py`` and the
+    certification smoke emit, so the derived columns (runtime messages,
+    payload bytes) are computed in exactly one place."""
+
+    family: str
+    s: int
+    iterations: int
+    budget: CollectiveBudget
+
+    @property
+    def allreduces_in_loop(self) -> int:
+        return self.budget.per_iteration["all-reduce"]
+
+    @property
+    def other_collectives(self) -> int:
+        return sum(v for k, v in self.budget.total.items()
+                   if k != "all-reduce")
+
+    @property
+    def trips(self) -> int:
+        return -(-self.iterations // self.s)
+
+    @property
+    def runtime_messages(self) -> int:
+        return self.allreduces_in_loop * self.trips
+
+    @property
+    def bytes_per_outer(self) -> float:
+        return self.budget.per_iteration_bytes
+
+
+# the report shapes: large enough that the payload-bytes column is
+# representative, small enough to trace the whole registry in seconds.
+BUDGET_SHAPES = {"row": (512, 128), "col": (256, 512)}
+
+
+def budget_rows(families: Optional[Tuple[str, ...]] = None,
+                s_values: Tuple[int, ...] = (1, 4, 16),
+                iterations: int = 64,
+                shapes: Optional[Dict[str, Tuple[int, int]]] = None
+                ) -> Dict[Tuple[str, int], BudgetRow]:
+    """Assemble the per-(family, s) collective-budget rows every
+    reporting surface shares: trace each registered family's default
+    solve at each s and wrap the budget in a :class:`BudgetRow`."""
+    from repro.core.types import FAMILIES
+    shapes = shapes or BUDGET_SHAPES
+    rows: Dict[Tuple[str, int], BudgetRow] = {}
+    for name in sorted(families or FAMILIES):
+        fam = FAMILIES[name]
+        m, n = shapes[fam.partition]
+        for s in s_values:
+            cfg = SolverConfig(block_size=fam.bench_block_size,
+                               iterations=iterations, s=s,
+                               track_objective=False)
+            rows[(name, s)] = BudgetRow(
+                family=name, s=s, iterations=iterations,
+                budget=solver_collective_budget(fam, cfg, m=m, n=n))
+    return rows

@@ -48,6 +48,9 @@ class Diagnostic:
         return f"[{self.check}] {self.severity}: {self.where}: " \
                f"{self.message}"
 
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
 
 @dataclasses.dataclass
 class AnalysisReport:
@@ -78,6 +81,18 @@ class AnalysisReport:
             f"{sum(d.severity == 'warning' for d in self.diagnostics)} "
             f"warning(s)")
         return "\n".join(lines)
+
+    def to_dict(self) -> dict:
+        """JSON-ready report: the ``--json`` CLI payload CI artifacts
+        and downstream tools consume instead of scraping the text."""
+        return {
+            "ok": self.ok,
+            "errors": len(self.errors),
+            "warnings": sum(d.severity == "warning"
+                            for d in self.diagnostics),
+            "checked": list(self.checked),
+            "diagnostics": [d.to_dict() for d in self.diagnostics],
+        }
 
 
 def variant_config(fam: ProblemFamily, variant: str,

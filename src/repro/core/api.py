@@ -330,26 +330,58 @@ class TracedSolve:
 
 
 def trace_sharded(family: object, cfg: SolverConfig, mesh: Mesh,
-                  m: int, n: int, axes: Optional[AxisNames] = None,
+                  m: Optional[int] = None, n: Optional[int] = None,
+                  axes: Optional[AxisNames] = None,
                   dtype=jnp.float32,
-                  problem_kwargs: Optional[Dict[str, Any]] = None
+                  problem_kwargs: Optional[Dict[str, Any]] = None,
+                  operand: Optional[SparseOperand] = None
                   ) -> TracedSolve:
     """Trace (without lowering or executing) a full sharded solve for
     shape (m, n), with the family's ``aux_out`` vectors AND
     ``state_layout`` carry leaves as outputs — the same output structure
     :func:`solve_sharded` runs, so a static pass over this jaxpr checks
     the program the driver actually executes. ``repro.analysis`` builds
-    its collective-budget and replicated-taint passes on this entry;
-    a 1-device mesh suffices (divergence is symbolic in the jaxpr)."""
+    its collective-budget, replicated-taint and cost-certification
+    passes on this entry; a 1-device mesh suffices (divergence is
+    symbolic in the jaxpr).
+
+    ``operand``: an optional concrete :class:`SparseOperand` A. The
+    trace then follows the SPARSE execution path — the operand is split
+    and stacked exactly as :func:`solve_sharded` does it (the blocked-
+    ELL leaves cross shard_map with one leading-axis spec), so the
+    jaxpr's flop counts reflect the O(nnz) gather/scatter products,
+    which is what the cost certifier's nnz-scaling check measures.
+    (m, n) then come from ``operand.shape`` and must not be passed."""
     fam = resolve_family(family=family)
     if axes is None:
         axes = fam.default_axes
+    if operand is not None:
+        if m is not None or n is not None:
+            raise ValueError(
+                "trace_sharded: pass either operand= (sparse; shape "
+                "comes from the operand) or m=/n= (dense), not both")
+        m, n = operand.shape
+    elif m is None or n is None:
+        raise ValueError("trace_sharded: a dense trace needs m= and n=")
     kwargs = dict(fam.bench_problem_kwargs if problem_kwargs is None
                   else problem_kwargs)
     vec, a_spec, b_spec, x_out = _specs(fam, axes)
     layout = fam.state_layout(cfg) if fam.state_layout is not None else ()
+    sparse = operand is not None
+    if sparse:
+        n_shards = _axis_size(mesh, axes)
+        part_axis = 0 if fam.partition == "row" else 1
+        padded = -(-operand.shape[part_axis] // n_shards) * n_shards
+        A_arg = _stack_sparse_shards(operand, n_shards, part_axis,
+                                     padded, dtype)
+        b_len = padded if fam.partition == "row" else m
+    else:
+        A_arg = jax.ShapeDtypeStruct((m, n), dtype)
+        b_len = m
 
     def local_solve(A_loc, b_loc):
+        if sparse:
+            A_loc = A_loc.squeeze_shard()
         prob = fam.problem_cls(A=A_loc, b=b_loc, **kwargs)
         res = fam.solve(prob, cfg, axis_name=axes)
         outs = (res.x, res.objective) \
@@ -363,11 +395,12 @@ def trace_sharded(family: object, cfg: SolverConfig, mesh: Mesh,
                       for _, lay in fam.aux_out)
     state_specs = tuple(vec if lay == "partition" else P()
                         for _, lay in layout)
-    fn = shard_map(local_solve, mesh=mesh, in_specs=(a_spec, b_spec),
+    fn = shard_map(local_solve, mesh=mesh,
+                   in_specs=(vec if sparse else a_spec, b_spec),
                    out_specs=(x_out, P()) + aux_specs + state_specs,
                    check_rep=False)
-    jaxpr = jax.make_jaxpr(fn)(jax.ShapeDtypeStruct((m, n), dtype),
-                               jax.ShapeDtypeStruct((m,), dtype))
+    jaxpr = jax.make_jaxpr(fn)(A_arg,
+                               jax.ShapeDtypeStruct((b_len,), dtype))
     out_layout = (
         ("x", "partition" if fam.partition == "col" else "replicated"),
         ("objective", "replicated"),

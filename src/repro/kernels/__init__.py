@@ -14,11 +14,19 @@ Kernels:
 ``dispatch`` is the shared Pallas-vs-ref policy; its helpers (and the
 warn-once reset the test suite uses) are re-exported here.
 """
-from repro.kernels.dispatch import (choose_inner_impl, choose_spmm_impl,
+from repro.kernels.dispatch import (KernelVmemEntry, choose_inner_impl,
+                                    choose_spmm_impl, kernel_vmem_model,
                                     reset_fallback_warnings, spmm_vmem_ok,
                                     vmem_ok)
 
+# Every kernel package under repro.kernels — the enumeration the static
+# kernel safety pass (repro.analysis.kernels) must cover: a new package
+# added here without a registered describer fails the analyzer.
+KERNEL_PACKAGES = ("gram", "spmm", "sa_inner", "svm_inner",
+                   "flash_attention")
+
 __all__ = [
-    "choose_inner_impl", "choose_spmm_impl", "reset_fallback_warnings",
+    "KERNEL_PACKAGES", "KernelVmemEntry", "choose_inner_impl",
+    "choose_spmm_impl", "kernel_vmem_model", "reset_fallback_warnings",
     "spmm_vmem_ok", "vmem_ok",
 ]

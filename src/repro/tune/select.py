@@ -116,7 +116,7 @@ def predicted_solve_time(fam, dims, cfg: SolverConfig, machine: Machine,
 def select_config(problem, machine: Machine, base_cfg: SolverConfig,
                   family=None, *, P: int = 1,
                   allow_pallas: Optional[bool] = None,
-                  grid=None) -> SolverConfig:
+                  grid=None, certified: bool = False) -> SolverConfig:
     """The tuned SolverConfig: argmin of the calibrated model over the
     candidate grid, preserving everything the tuner does not own
     (iterations, dtype, seed, accelerated, track_objective, ...).
@@ -124,10 +124,26 @@ def select_config(problem, machine: Machine, base_cfg: SolverConfig,
     allow_pallas=None auto-detects: Pallas is only proposed on TPU
     backends (on CPU the kernels run in interpret mode — strictly
     slower than the jnp reference paths).
+
+    certified=True first runs the static cost certifier
+    (``repro.analysis.check_costs``) on the family and refuses to fit
+    the machine model against a cost hook the certifier rejects — a
+    hook whose counted flops/bytes/messages disagree with the traced
+    solve would make every "tuned" recommendation a fit to fiction.
     """
     from repro.core.api import resolve_family
 
     fam = resolve_family(problem, family)
+    if certified:
+        from repro.analysis.costs import check_costs
+        diags, _ = check_costs(fam)
+        errors = [d for d in diags if d.severity == "error"]
+        if errors:
+            detail = "; ".join(f"{d.where}: {d.message}" for d in errors)
+            raise ValueError(
+                f"refusing to tune against an uncertified cost model "
+                f"for family {fam.name!r}: the static cost certifier "
+                f"reports {len(errors)} error(s) — {detail}")
     dims = problem_dims(problem)
     kernel = getattr(problem, "kernel", "linear")
     if allow_pallas is None:
